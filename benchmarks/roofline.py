@@ -1,0 +1,121 @@
+"""Roofline collation: reads reports/dryrun/*.json into the EXPERIMENTS.md
+§Dry-run and §Roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--tag single] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES
+
+ORDER = list(ARCHS)
+SHAPE_ORDER = list(SHAPES)
+
+
+def load(tag: str = "single", directory: str = "reports/dryrun"):
+    recs = {}
+    for f in glob.glob(os.path.join(directory, f"*_{tag}.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def _fmt(x, digits=2):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    return f"{x:.{digits}e}"
+
+
+def markdown_table(recs, tag: str) -> str:
+    lines = [
+        f"### Roofline terms — {tag}-pod mesh "
+        f"(per device; v5e: 197 TF bf16, 819 GB/s HBM, 50 GB/s ICI)",
+        "",
+        "| arch | shape | t_compute | t_memory | t_mem(flash) | "
+        "t_collective | bottleneck | useful (6ND/HLO) | peak HBM/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | — | "
+                             f"SKIP: {r['reason'][:40]} | — | — |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | — | — | — | — | "
+                             f"ERROR | — | — |")
+                continue
+            ro = r["roofline"]
+            peak = (r.get("memory") or {}).get("peak_bytes")
+            tmf = r.get("t_memory_flash_s", ro["t_memory_s"])
+            lines.append(
+                f"| {arch} | {shape} | {_fmt(ro['t_compute_s'])}s | "
+                f"{_fmt(ro['t_memory_s'])}s | {_fmt(tmf)}s | "
+                f"{_fmt(ro['t_collective_s'])}s | "
+                f"**{ro['bottleneck']}** | {ro['useful_ratio']:.2f} | "
+                f"{(peak or 0) / 1e9:.1f} GB |")
+    return "\n".join(lines)
+
+
+def bottleneck_note(r) -> str:
+    """One sentence: what would move this cell's dominant term down."""
+    if r["status"] != "ok":
+        return ""
+    ro = r["roofline"]
+    b = ro["bottleneck"]
+    attn = r.get("attn_score_bytes", 0)
+    coll = r.get("collectives", {})
+    if b == "memory":
+        if attn > 0.3 * r.get("hlo_bytes", 1):
+            return ("S^2 attention-score traffic dominates: the Pallas "
+                    "flash kernel (VMEM-resident scores) is the fix — see "
+                    "t_mem(flash).")
+        if r["shape"].startswith("decode") or r["shape"].startswith("long"):
+            return ("decode reads the whole KV/SSM state once per token — "
+                    "already near the roofline floor; further wins need a "
+                    "quantized (int8) cache or batching more requests.")
+        return ("elementwise/stash traffic between fusion boundaries: "
+                "bigger fused blocks (TPU backend) or fewer microbatches.")
+    if b == "collective":
+        if coll.get("all-to-all", 0) > 0.3 * sum(coll.values()):
+            return ("MoE dispatch all-to-all: larger moe_groups (local "
+                    "dispatch) or expert replication when the pool is small.")
+        return ("per-layer TP all-reduces: reduce-scatter+all-gather "
+                "sequence parallelism, or shift parallelism from model to "
+                "data axis for this size.")
+    return ("compute-bound: increase per-device batch or enable the "
+            "compact soft-training path (FLOPs scale with P).")
+
+
+def summary(recs) -> dict:
+    out = {"ok": 0, "skipped": 0, "error": 0, "bottlenecks": {}}
+    for r in recs.values():
+        out[r["status"]] = out.get(r["status"], 0) + 1
+        if r["status"] == "ok":
+            b = r["roofline"]["bottleneck"]
+            out["bottlenecks"][b] = out["bottlenecks"].get(b, 0) + 1
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="single")
+    ap.add_argument("--dir", default="reports/dryrun")
+    args = ap.parse_args()
+    recs = load(args.tag, args.dir)
+    print(markdown_table(recs, args.tag))
+    print()
+    print(summary(recs))
+
+
+if __name__ == "__main__":
+    main()

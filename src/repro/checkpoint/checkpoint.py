@@ -1,0 +1,124 @@
+"""Fault-tolerant checkpointing: atomic msgpack+zstd snapshots, keep-N GC.
+
+Any pytree of arrays (train state, FL server state including Helios masks and
+skip counters, optimizer moments) round-trips.  Writes go to a temp file then
+``os.replace`` (atomic on POSIX) so a crash mid-write never corrupts the
+latest checkpoint; restart picks up the newest complete step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+_KEY_RE = re.compile(r"^ckpt_(\d+)\.msgpack\.zst$")
+
+
+def _flatten(tree, path=()):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], path + (str(k),)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, path + (f"<{i}>",)))
+        if len(tree) == 0:
+            out["/".join(path) + "/<empty>"] = np.zeros((0,), np.int8)
+    else:
+        out["/".join(path)] = np.asarray(tree)
+    return out
+
+
+def _pack_leaf(arr: np.ndarray):
+    return {"dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _unpack_leaf(d) -> np.ndarray:
+    return np.frombuffer(d["data"], dtype=d["dtype"]).reshape(d["shape"])
+
+
+def save(directory: str, step: int, tree: Any, keep: int = 3,
+         metadata: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = {k: _pack_leaf(v) for k, v in _flatten(jax.device_get(tree)).items()}
+    payload = msgpack.packb({"step": step, "leaves": flat,
+                             "metadata": json.dumps(metadata or {})})
+    comp = zstandard.ZstdCompressor(level=3).compress(payload)
+    final = os.path.join(directory, f"ckpt_{step}.msgpack.zst")
+    tmp = final + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(comp)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)                    # atomic publish
+    _gc(directory, keep)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := _KEY_RE.match(f))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, target: Any, step: Optional[int] = None):
+    """Restore into the structure of ``target`` (shapes/dtypes preserved).
+
+    Returns (tree, step).  Raises FileNotFoundError when no checkpoint exists.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step}.msgpack.zst")
+    raw = zstandard.ZstdDecompressor().decompress(
+        open(path, "rb").read(), max_output_size=1 << 34)
+    obj = msgpack.unpackb(raw)
+    flat = {k: _unpack_leaf(v) for k, v in obj["leaves"].items()}
+
+    def rebuild(node, path=()):
+        if isinstance(node, dict):
+            return {k: rebuild(v, path + (str(k),)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [rebuild(v, path + (f"<{i}>",)) for i, v in enumerate(node)]
+            return type(node)(t) if not isinstance(node, tuple) else tuple(t)
+        key = "/".join(path)
+        arr = flat[key]
+        leaf = np.asarray(node)
+        if tuple(arr.shape) != leaf.shape:
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"target {leaf.shape}")
+        if hasattr(node, "dtype") and isinstance(node, jax.Array):
+            return jnp.asarray(arr.astype(leaf.dtype))
+        return arr.astype(leaf.dtype)
+
+    return rebuild(target), step
+
+
+def metadata(directory: str, step: Optional[int] = None) -> dict:
+    if step is None:
+        step = latest_step(directory)
+    path = os.path.join(directory, f"ckpt_{step}.msgpack.zst")
+    raw = zstandard.ZstdDecompressor().decompress(
+        open(path, "rb").read(), max_output_size=1 << 34)
+    return json.loads(msgpack.unpackb(raw)["metadata"])
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(int(m.group(1)) for f in os.listdir(directory)
+                   if (m := _KEY_RE.match(f)))
+    for s in steps[:-keep]:
+        try:
+            os.remove(os.path.join(directory, f"ckpt_{s}.msgpack.zst"))
+        except OSError:
+            pass

@@ -1,0 +1,109 @@
+"""Config registry: ``--arch <id>`` lookup + reduced smoke-test configs."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import (HeliosConfig, MeshConfig, ModelConfig,
+                                RunConfig, ShapeConfig, TrainConfig)
+from repro.configs.shapes import SHAPES, applicable, cells
+
+from repro.configs import (codeqwen1_5_7b, deepseek_7b, deepseek_v2_236b,
+                           granite_moe_1b_a400m, internvl2_1b, paper_cnns,
+                           qwen1_5_32b, qwen2_5_32b, seamless_m4t_large_v2,
+                           xlstm_125m, zamba2_1_2b)
+
+#: The 10 assigned architectures, keyed by their public ids.
+ARCHS: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        seamless_m4t_large_v2,
+        granite_moe_1b_a400m,
+        deepseek_v2_236b,
+        deepseek_7b,
+        qwen1_5_32b,
+        qwen2_5_32b,
+        codeqwen1_5_7b,
+        zamba2_1_2b,
+        xlstm_125m,
+        internvl2_1b,
+    )
+}
+
+#: Paper testbed CNNs (LeNet / AlexNet / ResNet-18).
+CNNS = paper_cnns.CNNS
+
+ALL_MODELS: dict[str, ModelConfig] = {**ARCHS, **CNNS}
+
+
+def get_model_config(name: str) -> ModelConfig:
+    try:
+        return ALL_MODELS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(ALL_MODELS)}") from None
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def _scale_layers(cfg: ModelConfig, n: int) -> dict:
+    upd: dict = {"num_layers": n}
+    if cfg.family == "encdec":
+        upd.update(enc_layers=max(1, n // 2), dec_layers=max(1, n // 2),
+                   num_layers=2 * max(1, n // 2))
+    if cfg.slstm_layers:
+        upd["slstm_layers"] = (1,)           # keep one sLSTM in the reduced stack
+    if cfg.attn_every:
+        upd["attn_every"] = 2
+    if cfg.first_k_dense:
+        upd["first_k_dense"] = 1
+    return upd
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Reduced config of the same family for CPU smoke tests.
+
+    Small layers/width, few experts, tiny embedding tables — exercises every
+    structural feature (GQA ratio, MLA, shared experts, hybrid schedule, ...)
+    at toy scale.  FULL configs are only ever lowered abstractly (dry-run).
+    """
+    if cfg.family == "cnn":
+        return dataclasses.replace(
+            cfg, cnn_channels=tuple(max(4, c // 8) for c in cfg.cnn_channels),
+            image_size=min(cfg.image_size, 16))
+
+    kv_ratio = max(1, cfg.num_heads // max(1, cfg.num_kv_heads))
+    heads = 4 if cfg.num_heads % 2 == 0 else 3   # keep odd-head quirk (internvl2)
+    kv = max(1, heads // min(kv_ratio, heads))
+    upd = dict(
+        d_model=64,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=16,
+        d_ff=96 if cfg.d_ff else 0,
+        vocab_size=256,
+        **_scale_layers(cfg, 4),
+    )
+    if cfg.family == "moe":
+        upd.update(num_experts=8,
+                   num_experts_per_tok=min(2, cfg.num_experts_per_tok),
+                   moe_d_ff=32)
+    if cfg.use_mla:
+        upd.update(q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                   qk_rope_head_dim=8, v_head_dim=16)
+    if cfg.family in ("hybrid", "ssm"):
+        upd.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=32)
+    if cfg.num_image_tokens:
+        upd.update(num_image_tokens=8)
+    return dataclasses.replace(cfg, **upd)
+
+
+SMOKE_SHAPE = ShapeConfig("smoke", "train", seq_len=64, global_batch=2)
+
+__all__ = [
+    "ARCHS", "CNNS", "ALL_MODELS", "SHAPES", "SMOKE_SHAPE",
+    "ModelConfig", "ShapeConfig", "HeliosConfig", "TrainConfig", "MeshConfig",
+    "RunConfig", "get_model_config", "get_shape", "reduced", "applicable",
+    "cells",
+]

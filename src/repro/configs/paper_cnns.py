@@ -1,0 +1,39 @@
+"""The paper's own testbed models (Section VII.A): LeNet / AlexNet / ResNet-18.
+
+Trained on synthetic MNIST / CIFAR-10 / CIFAR-100 shaped data (offline
+container — see data/synthetic.py).  These are the faithful-reproduction
+models for Fig. 5-7 and Table I.
+"""
+from repro.configs.base import ModelConfig
+
+LENET = ModelConfig(
+    name="lenet",
+    family="cnn",
+    num_layers=5,
+    d_model=0, num_heads=0, num_kv_heads=0, d_ff=0, vocab_size=0,
+    image_size=28, in_channels=1, num_classes=10,
+    cnn_channels=(6, 16),          # conv stages; then 120-84-10 dense head
+    scan_layers=False, remat=False,
+)
+
+ALEXNET = ModelConfig(
+    name="alexnet",
+    family="cnn",
+    num_layers=8,
+    d_model=0, num_heads=0, num_kv_heads=0, d_ff=0, vocab_size=0,
+    image_size=32, in_channels=3, num_classes=10,
+    cnn_channels=(64, 192, 384, 256, 256),   # CIFAR-scale AlexNet
+    scan_layers=False, remat=False,
+)
+
+RESNET18 = ModelConfig(
+    name="resnet18",
+    family="cnn",
+    num_layers=18,
+    d_model=0, num_heads=0, num_kv_heads=0, d_ff=0, vocab_size=0,
+    image_size=32, in_channels=3, num_classes=100,
+    cnn_channels=(64, 128, 256, 512),        # stage widths, 2 blocks each
+    scan_layers=False, remat=False,
+)
+
+CNNS = {c.name: c for c in (LENET, ALEXNET, RESNET18)}

@@ -1,0 +1,6 @@
+"""Helios core: the paper's contribution as a composable JAX module."""
+from repro.core import (aggregation, contribution, identification, masking,
+                        selection, soft_train, theory, volume)
+
+__all__ = ["aggregation", "contribution", "identification", "masking",
+           "selection", "soft_train", "theory", "volume"]

@@ -1,0 +1,97 @@
+"""Heterogeneous model aggregation (Section VI.B, Eq. 10) + variants.
+
+* ``alpha_weighted`` (paper): client n is weighted alpha_n = r_n / sum(r_m),
+  r_n = its selected-neuron ratio — a more complete sub-model contributes
+  more.
+* ``masked_mean`` (beyond-paper): per-COORDINATE weighted mean over the
+  clients that actually trained each coordinate; coordinates nobody trained
+  keep the previous global value.  Removes the bias the model-level alpha
+  weighting leaves on units trained by few clients.
+* ``uniform``: plain FedAvg (the Syn./Asyn. FL baselines).
+
+All functions operate on pytrees and are jit-friendly; in the datacenter
+mapping the same weighted mean is a single all-reduce over the client mesh
+axis (launch/train.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def alpha_weights(ratios: Sequence[float]) -> jnp.ndarray:
+    r = jnp.asarray(ratios, jnp.float32)
+    return r / jnp.maximum(jnp.sum(r), 1e-9)
+
+
+def aggregate_alpha(global_params, client_params: Sequence,
+                    ratios: Sequence[float]):
+    """Eq. 10: theta = sum_n alpha_n theta_n."""
+    a = alpha_weights(ratios)
+
+    def combine(*leaves):
+        g = leaves[0]
+        acc = jnp.zeros_like(g, jnp.float32)
+        for w, leaf in zip(a, leaves[1:]):
+            acc = acc + w * leaf.astype(jnp.float32)
+        return acc.astype(g.dtype)
+
+    return jax.tree.map(combine, global_params, *client_params)
+
+
+def aggregate_masked_mean(global_params, client_params: Sequence,
+                          client_masks: Sequence,
+                          ratios: Optional[Sequence[float]] = None):
+    """Per-coordinate mean over clients whose mask covers the coordinate.
+
+    client_masks: param-shaped 0/1 trees (core.masking.expand_masks).
+    Optionally alpha-weighted within the covered set.
+    """
+    n = len(client_params)
+    a = alpha_weights(ratios) if ratios is not None else \
+        jnp.full((n,), 1.0 / n, jnp.float32)
+
+    def combine(g, *mp):
+        masks = mp[:n]
+        thetas = mp[n:]
+        num = jnp.zeros_like(g, jnp.float32)
+        den = jnp.zeros_like(g, jnp.float32)
+        for w, m, t in zip(a, masks, thetas):
+            num = num + w * m * t.astype(jnp.float32)
+            den = den + w * m
+        return jnp.where(den > 0, num / jnp.maximum(den, 1e-9),
+                         g.astype(jnp.float32)).astype(g.dtype)
+
+    return jax.tree.map(combine, global_params, *client_masks, *client_params)
+
+
+def aggregate_uniform(global_params, client_params: Sequence):
+    return aggregate_alpha(global_params, client_params,
+                           [1.0] * len(client_params))
+
+
+def staleness_weight(staleness: int, a: float = 0.5) -> float:
+    """AFO (Xie et al. 2019) polynomial staleness discount (t - tau + 1)^-a."""
+    return float((staleness + 1.0) ** (-a))
+
+
+def mix(global_params, client_params, weight: float):
+    """Async mixing: theta <- (1-w) theta + w theta_client (AFO/Asyn paths)."""
+    return jax.tree.map(
+        lambda g, c: ((1 - weight) * g.astype(jnp.float32)
+                      + weight * c.astype(jnp.float32)).astype(g.dtype),
+        global_params, client_params)
+
+
+def aggregate(cfg_mode: str, global_params, client_params,
+              ratios=None, client_masks=None):
+    if cfg_mode == "alpha_weighted":
+        return aggregate_alpha(global_params, client_params, ratios)
+    if cfg_mode == "masked_mean":
+        return aggregate_masked_mean(global_params, client_params,
+                                     client_masks, ratios)
+    if cfg_mode == "uniform":
+        return aggregate_uniform(global_params, client_params)
+    raise ValueError(cfg_mode)

@@ -1,0 +1,129 @@
+"""Collaboration-contribution metric (paper Eq. 1).
+
+U^{ij}(S_k) = theta^{ij}(S_k) - theta^{ij}(S_{k-1}) per neuron — we reduce the
+per-neuron weight-delta vector with an L1 norm over its fan-in/fan-out entries
+(DESIGN.md §7.5: "changing values" reads as magnitude).
+
+The reduction is driven entirely by LOGICAL AXES: for unit key ``mlp`` every
+parameter that carries an ``mlp`` axis contributes |delta| summed over all its
+other dims, aligned to the (layers, units) mask layout.  The same machinery
+computes per-unit scores for any family (heads, experts, ssm_heads, conv
+filters) without model-specific code.
+
+Config switch ``contribution``:
+  * ``delta``    — paper-faithful Eq. 1 (needs the previous cycle's params);
+  * ``grad_ema`` — EMA of per-unit |grad| (refs [18][20]); O(units) state,
+    used in the datacenter path where keeping a second copy of 236B params
+    per client is wasteful (DESIGN.md §7.4).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import tree_paths
+
+#: mask-schema key -> the logical axis that identifies the unit dim
+UNIT_AXES = {
+    "mlp": "mlp",
+    "heads": "heads",
+    "enc_heads": "heads",
+    "cross_heads": "heads",
+    "enc_mlp": "mlp",
+    "experts": "experts",
+    "ssm_heads": "ssm_heads",
+    "slstm_heads": "ssm_heads",
+}
+
+
+def _reduce_to_units(arr: jax.Array, axes: tuple, unit_axis: str,
+                     layered: bool) -> jax.Array:
+    """|arr| summed over every dim except (layers?, unit_axis)."""
+    keep = []
+    if layered and axes and axes[0] == "layers":
+        keep.append(0)
+    try:
+        u = axes.index(unit_axis)
+    except ValueError:
+        return None
+    keep.append(u)
+    red = tuple(i for i in range(arr.ndim) if i not in keep)
+    out = jnp.sum(jnp.abs(arr.astype(jnp.float32)), axis=red)
+    if not (layered and axes and axes[0] == "layers"):
+        out = out[None]                                   # (1, units)
+    return out
+
+
+def unit_scores(delta_tree, axes_tree, schema: Dict[str, tuple],
+                key_prefixes: Dict[str, str] | None = None) -> Dict[str, jax.Array]:
+    """Per-unit L1 scores of a param-delta (or grad) tree.
+
+    Returns {schema_key: (layers, units) float32}.  ``key_prefixes``
+    optionally restricts a schema key to param paths with a prefix — needed
+    when the same logical axis appears in several stacks (e.g. encoder vs
+    decoder heads).
+    """
+    params = dict(tree_paths(delta_tree))
+    axes = dict(tree_paths(axes_tree, is_leaf=lambda x: isinstance(x, tuple)))
+    out = {}
+    for key, shape in schema.items():
+        # schema keys may carry a path-component prefix: "b3:ssm_heads"
+        # restricts to params whose path contains the component "b3"
+        # (unrolled per-layer stacks, e.g. xLSTM blocks).
+        if ":" in key:
+            prefix, axis_key = key.split(":", 1)
+        else:
+            prefix, axis_key = (key_prefixes or {}).get(key), key
+        unit_axis = UNIT_AXES.get(axis_key, "filters")
+        acc = jnp.zeros(shape, jnp.float32)
+        for path, arr in params.items():
+            ax = axes.get(path)
+            if ax is None or unit_axis not in ax:
+                continue
+            if prefix is not None and f"/{prefix}/" not in f"/{path}/":
+                continue
+            if axis_key.startswith("enc_") and "enc_" not in path:
+                continue
+            if not axis_key.startswith("enc_") and prefix is None and \
+                    axis_key in ("heads", "mlp") and path.startswith("enc_"):
+                continue
+            if axis_key == "cross_heads" and "/cross/" not in f"/{path}/":
+                continue
+            if axis_key == "heads" and "cross" in path:
+                continue
+            r = _reduce_to_units(arr, ax, unit_axis, layered=True)
+            if r is None or r.shape != tuple(shape):
+                continue
+            acc = acc + r
+        out[key] = acc
+    return out
+
+
+def cnn_unit_scores(delta_tree, schema: Dict[str, tuple]) -> Dict[str, jax.Array]:
+    """CNN variant: schema keys ARE param-name prefixes (conv0, fc1, ...)."""
+    params = dict(tree_paths(delta_tree))
+    out = {}
+    for key, shape in schema.items():
+        w = params.get(f"{key}_w")
+        b = params.get(f"{key}_b")
+        acc = jnp.zeros(shape[-1], jnp.float32)
+        if w is not None:
+            red = tuple(range(w.ndim - 1))
+            acc = acc + jnp.sum(jnp.abs(w.astype(jnp.float32)), axis=red)
+        if b is not None:
+            acc = acc + jnp.abs(b.astype(jnp.float32))
+        out[key] = acc[None]                              # (1, units)
+    return out
+
+
+def delta(params_new, params_old):
+    return jax.tree.map(lambda a, b: a.astype(jnp.float32) -
+                        b.astype(jnp.float32), params_new, params_old)
+
+
+def ema_update(scores_prev: Dict[str, jax.Array],
+               scores_new: Dict[str, jax.Array], decay: float):
+    return {k: decay * scores_prev[k] + (1 - decay) * scores_new[k]
+            for k in scores_new}

@@ -1,0 +1,115 @@
+"""Expand per-unit Helios masks into parameter-space masks.
+
+Used for (a) gradient/update masking in the train step, (b) per-coordinate
+masked-mean aggregation (the beyond-paper aggregation option), and (c) the
+theory utilities.  A parameter whose logical axes contain several maskable
+unit axes (e.g. MoE ``wi``: experts x mlp) gets the OUTER PRODUCT of the unit
+masks.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.contribution import UNIT_AXES
+from repro.models.module import tree_paths
+
+
+def _match(key: str, path: str, axes: tuple) -> str | None:
+    """Return the unit axis name if schema ``key`` applies to this param."""
+    if ":" in key:
+        prefix, axis_key = key.split(":", 1)
+        if f"/{prefix}/" not in f"/{path}/":
+            return None
+    else:
+        axis_key = key
+    unit_axis = UNIT_AXES.get(axis_key, "filters")
+    if unit_axis not in axes:
+        return None
+    if axis_key.startswith("enc_") and "enc_" not in path:
+        return None
+    if not axis_key.startswith("enc_") and axis_key in ("heads", "mlp") and \
+            path.startswith("enc_"):
+        return None
+    if axis_key == "cross_heads" and "/cross/" not in f"/{path}/":
+        return None
+    if axis_key == "heads" and "cross" in path:
+        return None
+    return unit_axis
+
+
+def expand_masks(axes_tree, unit_masks: Dict[str, jax.Array], params_tree):
+    """Build a params-shaped 0/1 mask tree from unit masks.
+
+    Parameters with no maskable axis get all-ones (they always train:
+    norms, embeddings, routers, biases of unmasked layers...).
+    """
+    axes = dict(tree_paths(axes_tree, is_leaf=lambda x: isinstance(x, tuple)))
+    flat_params = tree_paths(params_tree)
+    out = {}
+    for path, arr in flat_params:
+        ax = axes.get(path)
+        m = jnp.ones(arr.shape, jnp.float32)
+        if ax is not None:
+            layered = bool(ax) and ax[0] == "layers"
+            for key, um in unit_masks.items():
+                unit_axis = _match(key, path, ax)
+                if unit_axis is None:
+                    continue
+                dim = ax.index(unit_axis)
+                n_layers, n_units = um.shape
+                if arr.shape[dim] != n_units:
+                    continue
+                if layered and arr.shape[0] != n_layers:
+                    continue
+                if not layered and n_layers != 1:
+                    continue
+                shape = [1] * arr.ndim
+                shape[dim] = n_units
+                if layered:
+                    shape[0] = n_layers
+                    m = m * um.reshape(shape)
+                else:
+                    m = m * um[0].reshape(shape)
+        out[path] = m
+    # rebuild nested structure
+    return _unflatten(out)
+
+
+def cnn_expand_masks(unit_masks: Dict[str, jax.Array], params_tree):
+    """CNN variant: keys are param-name prefixes; mask the OUTPUT channel."""
+    out = {}
+    for path, arr in tree_paths(params_tree):
+        m = jnp.ones(arr.shape, jnp.float32)
+        for key, um in unit_masks.items():
+            v = um[0] if um.ndim == 2 else um
+            if path == f"{key}_w" and arr.shape[-1] == v.shape[0]:
+                m = m * v.reshape((1,) * (arr.ndim - 1) + (-1,))
+            elif path == f"{key}_b" and arr.shape[0] == v.shape[0]:
+                m = m * v
+        out[path] = m
+    return _unflatten(out)
+
+
+def _unflatten(flat: Dict[str, jax.Array]):
+    tree: dict = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+def apply_mask_tree(tree, mask_tree):
+    return jax.tree.map(lambda t, m: t * m.astype(t.dtype), tree, mask_tree)
+
+
+def selected_fraction(unit_masks: Dict[str, jax.Array]) -> jax.Array:
+    """r_n of Eq. 10: fraction of maskable units selected on this client."""
+    tot = sum(m.size for m in unit_masks.values())
+    sel = sum(jnp.sum(m) for m in unit_masks.values())
+    return sel / max(tot, 1)

@@ -1,0 +1,93 @@
+"""Neuron selection (paper Eq. 2) + rotation regulation (Section VI.A).
+
+Per layer, per unit type, with volume fraction P and contribution scores U:
+
+  selected = TopK(U) ∪ Rand(rest) ∪ Forced(C_s over threshold)
+  |TopK| = P_s * P * n      (primary convergence guarantee, Prop. 2)
+  |Rand| = (1-P_s) * P * n  (rotation -> model integrity)
+
+Counts are TRACED (thresholding a sorted array) so the adaptive volume
+controller can change P without recompiling.  Forced units (skipped for
+C_s > threshold cycles, Section VI.A) preempt the random draw — "pull the
+long-term skipped neurons back to training timely".
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _row_select(u: jax.Array, forced: jax.Array, k_total: jax.Array,
+                k_top: jax.Array, key: jax.Array) -> jax.Array:
+    """One layer row.  u: (n,) scores; forced: (n,) bool; returns (n,) 0/1."""
+    n = u.shape[0]
+    noise = jax.random.uniform(key, (n,), minval=0.0, maxval=1e-6)
+    u = u + noise                                         # random tie-break
+
+    # top-k by threshold on the sorted scores (k is traced)
+    su = jnp.sort(u)
+    idx_top = jnp.clip(n - k_top, 0, n - 1)
+    thresh = su[idx_top]
+    is_top = jnp.where(k_top > 0, u >= thresh, False)
+
+    # priority: forced >> top >> random
+    rand = jax.random.uniform(jax.random.fold_in(key, 1), (n,))
+    prio = forced.astype(jnp.float32) * 4.0 + is_top.astype(jnp.float32) * 2.0 + rand
+    sp = jnp.sort(prio)
+    idx_tot = jnp.clip(n - k_total, 0, n - 1)
+    pthresh = sp[idx_tot]
+    mask = (prio >= pthresh).astype(jnp.float32)
+    return mask
+
+
+def select_masks(scores: Dict[str, jax.Array],
+                 forced: Dict[str, jax.Array],
+                 volume: jax.Array,
+                 p_s: float,
+                 key: jax.Array) -> Dict[str, jax.Array]:
+    """Eq. 2 across all unit types.  scores/forced: {key: (L, n)}.
+
+    ``volume`` is the client's P (scalar in (0, 1], traced).  Returns masks
+    {key: (L, n) float 0/1} with ~P*n ones per row.
+    """
+    out = {}
+    for i, (k, u) in enumerate(sorted(scores.items())):
+        L, n = u.shape
+        k_total = jnp.clip(jnp.round(volume * n).astype(jnp.int32), 1, n)
+        k_top = jnp.round(p_s * k_total).astype(jnp.int32)
+        rows = jax.vmap(_row_select, in_axes=(0, 0, None, None, 0))(
+            u, forced.get(k, jnp.zeros_like(u, bool)), k_total, k_top,
+            jax.random.split(jax.random.fold_in(key, i), L))
+        out[k] = rows
+    return out
+
+
+def update_skip_counts(skip_counts: Dict[str, jax.Array],
+                       masks: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """C_s: 0 when the unit joined this cycle, else +1."""
+    return {k: jnp.where(masks[k] > 0, 0, skip_counts[k] + 1)
+            for k in skip_counts}
+
+
+def rotation_threshold(volume: jax.Array, auto: bool = True,
+                       fixed: int = 4) -> jax.Array:
+    """Section VI.A: threshold = 1 + m / sum(p_i n_i) = 1 + 1/P."""
+    if not auto:
+        return jnp.asarray(fixed, jnp.float32)
+    return 1.0 + 1.0 / jnp.maximum(volume, 1e-3)
+
+
+def forced_units(skip_counts: Dict[str, jax.Array],
+                 threshold: jax.Array) -> Dict[str, jax.Array]:
+    return {k: v.astype(jnp.float32) >= threshold for k, v in
+            skip_counts.items()}
+
+
+def init_skip_counts(schema: Dict[str, Tuple[int, int]]):
+    return {k: jnp.zeros(s, jnp.int32) for k, s in schema.items()}
+
+
+def init_scores(schema: Dict[str, Tuple[int, int]]):
+    return {k: jnp.zeros(s, jnp.float32) for k, s in schema.items()}

@@ -1,0 +1,85 @@
+"""Soft-training cycle state machine (Section V, Fig. 4).
+
+One Helios client's per-cycle flow:
+
+  begin_cycle:  forced = {C_s >= threshold}            (Section VI.A)
+                masks  = TopK(U) ∪ Rand ∪ forced        (Eq. 2)
+  ... local training with masked forward/grads ...
+  end_cycle:    U      = per-unit |theta_k - theta_{k-1}|   (Eq. 1)
+                C_s    = 0 where trained else +1
+
+The state is a plain dict pytree (jit-able, checkpointable).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HeliosConfig
+from repro.core import contribution as C
+from repro.core import selection as S
+
+
+def init_state(schema: Dict[str, tuple], volume: float = 1.0,
+               seed: int = 0) -> dict:
+    return {
+        "masks": {k: jnp.ones(s, jnp.float32) for k, s in schema.items()},
+        "scores": S.init_scores(schema),
+        "skip_counts": S.init_skip_counts(schema),
+        "volume": jnp.asarray(volume, jnp.float32),
+        "rng": jax.random.PRNGKey(seed),
+        "cycle": jnp.asarray(0, jnp.int32),
+    }
+
+
+def begin_cycle(state: dict, hcfg: HeliosConfig) -> dict:
+    """Select this cycle's masks from scores + rotation state."""
+    if not hcfg.enabled:
+        return state
+    rng, sub = jax.random.split(state["rng"])
+    thresh = S.rotation_threshold(state["volume"],
+                                  hcfg.rotation_threshold_auto,
+                                  hcfg.rotation_threshold)
+    forced = S.forced_units(state["skip_counts"], thresh)
+    masks = S.select_masks(state["scores"], forced, state["volume"],
+                           hcfg.p_s, sub)
+    return {**state, "masks": masks, "rng": rng}
+
+
+def end_cycle(state: dict, scores_new: Dict[str, jax.Array],
+              hcfg: HeliosConfig) -> dict:
+    """Fold in this cycle's contribution scores + update C_s counters."""
+    if hcfg.contribution == "grad_ema":
+        scores = C.ema_update(state["scores"], scores_new,
+                              hcfg.contribution_ema)
+    else:
+        scores = scores_new                                # Eq. 1 delta
+    return {
+        **state,
+        "scores": scores,
+        "skip_counts": S.update_skip_counts(state["skip_counts"],
+                                            state["masks"]),
+        "cycle": state["cycle"] + 1,
+    }
+
+
+def cycle_scores(params_new, params_old, axes_tree, schema,
+                 family: str = "lm") -> Dict[str, jax.Array]:
+    """Eq. 1 scores from a cycle's parameter delta."""
+    d = C.delta(params_new, params_old)
+    if family == "cnn":
+        return C.cnn_unit_scores(d, schema)
+    return C.unit_scores(d, axes_tree, schema)
+
+
+def grad_scores(grads, axes_tree, schema, family: str = "lm"):
+    """grad_ema variant: per-unit |grad| of one step (O(units) state)."""
+    if family == "cnn":
+        return C.cnn_unit_scores(grads, schema)
+    return C.unit_scores(grads, axes_tree, schema)
+
+
+def set_volume(state: dict, volume: float) -> dict:
+    return {**state, "volume": jnp.asarray(volume, jnp.float32)}

@@ -1,0 +1,69 @@
+"""Proposition-2 utilities: gradient-variance bound of soft-training.
+
+Soft-training's sampled gradient is the importance-sampling estimator
+ST(g)_i = D_i g_i / p_i (Eq. 5); its second moment is sum_i g_i^2 / p_i
+(Eq. 6).  Keeping the top-v coordinates with p=1 and sampling the tail with
+p_i proportional to |g_i| (Wangni et al. [19]) satisfies
+sum g_i^2/p_i <= (1+eps) sum g_i^2 with expected sparsity <= (1+rho) v
+(Eq. 9).  These functions are exercised by the hypothesis property tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def st_estimate(g: jax.Array, p: jax.Array, key: jax.Array) -> jax.Array:
+    """One draw of the unbiased estimator ST(g)_i = D_i g_i / p_i."""
+    d = (jax.random.uniform(key, g.shape) < p).astype(g.dtype)
+    return d * g / jnp.maximum(p, 1e-12)
+
+
+def st_second_moment(g: jax.Array, p: jax.Array) -> jax.Array:
+    """E||ST(g)||^2 = sum_i g_i^2 / p_i (Eq. 6)."""
+    return jnp.sum(jnp.square(g) / jnp.maximum(p, 1e-12))
+
+
+def variance_inflation(g: jax.Array, p: jax.Array) -> jax.Array:
+    """epsilon such that E||ST(g)||^2 = (1+eps) ||g||^2."""
+    base = jnp.sum(jnp.square(g))
+    return st_second_moment(g, p) / jnp.maximum(base, 1e-30) - 1.0
+
+
+def wangni_probabilities(g: jax.Array, v: int) -> jax.Array:
+    """Optimal selection probabilities: top-v kept (p=1), tail p_i ~ |g_i|.
+
+    The tail scale lambda is chosen so the expected number of sampled tail
+    coordinates is ~rho*v with rho set by the variance constraint; here we
+    normalize the tail to an expected v/2 extra samples (a practical choice;
+    the property tests only rely on p_i in (0, 1] and the Eq. 9 bound).
+    """
+    n = g.shape[0]
+    absg = jnp.abs(g)
+    order = jnp.argsort(-absg)
+    ranks = jnp.argsort(order)
+    in_top = ranks < v
+    tail = jnp.where(in_top, 0.0, absg)
+    tail_sum = jnp.maximum(jnp.sum(tail), 1e-30)
+    budget = v / 2
+    p_tail = jnp.clip(tail / tail_sum * budget, 1e-6, 1.0)
+    return jnp.where(in_top, 1.0, p_tail)
+
+
+def expected_sparsity(p: jax.Array) -> jax.Array:
+    """E||ST(g)||_0 = sum_i p_i (Eq. 9 LHS)."""
+    return jnp.sum(p)
+
+
+def check_convergence_condition(g: jax.Array, v: int, rho: float):
+    """Eq. 9: with top-v at p=1, E||ST(g)||_0 <= (1+rho) v for the Wangni
+    tail distribution with expected tail mass rho*v."""
+    absg = jnp.abs(g)
+    order = jnp.argsort(-absg)
+    ranks = jnp.argsort(order)
+    in_top = ranks < v
+    tail = jnp.where(in_top, 0.0, absg)
+    tail_sum = jnp.maximum(jnp.sum(tail), 1e-30)
+    p_tail = jnp.clip(tail / tail_sum * (rho * v), 0.0, 1.0)
+    p = jnp.where(in_top, 1.0, p_tail)
+    return expected_sparsity(p), (1 + rho) * v

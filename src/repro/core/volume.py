@@ -1,0 +1,55 @@
+"""Optimization-target determination (Section IV.C) + dynamic adaptation.
+
+Two paths, as in the paper:
+
+* ``assign_volume_levels`` — pre-defined volume levels assigned by the
+  time-cost ranking index T (black-box deployments); refined online by
+  ``adapt_volume`` during the first cycles.
+* ``volume_from_profile`` — white-box: pick P so the modeled cycle time of
+  the compressed model matches the collaboration pace.  Soft-training FLOPs
+  scale ~linearly in P (both matmuls of a masked hidden unit vanish), so the
+  first-order solve is P = pace / straggler_time, then the controller
+  corrects any modeling error.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def assign_volume_levels(time_costs: Sequence[float],
+                         levels: Sequence[float],
+                         num_stragglers: int) -> list[float]:
+    """Rank devices by time cost (T index); top-k stragglers get levels.
+
+    The slowest straggler gets the smallest volume level.  Non-stragglers
+    get 1.0.
+    """
+    order = np.argsort(np.asarray(time_costs))[::-1]       # slowest first
+    lv = sorted(levels)                                     # ascending
+    out = [1.0] * len(time_costs)
+    for rank, dev in enumerate(order[:num_stragglers]):
+        out[dev] = lv[min(rank, len(lv) - 1)]
+    return out
+
+
+def volume_from_profile(straggler_time: float, pace_time: float,
+                        min_volume: float = 0.125) -> float:
+    """White-box target: modeled time scales ~P -> P = pace / time."""
+    if straggler_time <= pace_time:
+        return 1.0
+    return float(np.clip(pace_time / straggler_time, min_volume, 1.0))
+
+
+def adapt_volume(volume: float, observed_time: float, deadline: float,
+                 gain: float = 0.5, min_volume: float = 0.125) -> float:
+    """Multiplicative controller: move P toward the deadline match.
+
+    P_new = P * (deadline / observed)^gain — gain < 1 damps oscillation
+    (the paper adjusts "during the first several training cycles").
+    """
+    if observed_time <= 0:
+        return volume
+    ratio = deadline / observed_time
+    return float(np.clip(volume * ratio ** gain, min_volume, 1.0))

@@ -1,0 +1,3 @@
+from repro.data import federated, synthetic
+
+__all__ = ["synthetic", "federated"]

@@ -1,0 +1,70 @@
+"""Synthetic datasets (offline container — no MNIST/CIFAR downloads).
+
+* ``class_gaussian_images`` — MNIST/CIFAR-shaped classification data: each
+  class has a random low-frequency template; samples = template + noise.
+  Linear-separable enough to converge in tens of steps, hard enough that
+  convergence ORDER between FL schemes is informative (the reproduction
+  target — DESIGN.md §7.3).
+* ``markov_tokens`` — LM pretraining streams from a random per-document
+  Markov chain over the vocab: next-token entropy is well below uniform, so
+  CE falls measurably within a few hundred steps of the ~100M-param example.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def class_gaussian_images(num: int, image_size: int, channels: int,
+                          num_classes: int, seed: int = 0,
+                          noise: float = 0.7,
+                          template_seed: int = 1234
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (images (N,H,W,C) float32, labels (N,) int32).
+
+    ``template_seed`` fixes the class templates independently of the sample
+    ``seed`` so train/test splits drawn with different seeds share the same
+    class structure.
+    """
+    trng = np.random.default_rng(template_seed)
+    rng = np.random.default_rng(seed)
+    # low-frequency class templates (smooth random fields)
+    low = max(2, image_size // 4)
+    templates = trng.normal(size=(num_classes, low, low, channels))
+    reps = int(np.ceil(image_size / low))
+    templates = np.kron(templates, np.ones((1, reps, reps, 1)))[
+        :, :image_size, :image_size, :]
+    labels = rng.integers(0, num_classes, size=num).astype(np.int32)
+    images = templates[labels] + noise * rng.normal(
+        size=(num, image_size, image_size, channels))
+    return images.astype(np.float32), labels
+
+
+def markov_tokens(num_seqs: int, seq_len: int, vocab: int, seed: int = 0,
+                  branching: int = 8) -> np.ndarray:
+    """(N, S) int32 sequences from a sparse random Markov chain.
+
+    Each token has ``branching`` plausible successors -> ~log2(branching)
+    bits/token achievable vs log2(vocab) at random.
+    """
+    rng = np.random.default_rng(seed)
+    succ = rng.integers(0, vocab, size=(vocab, branching))
+    out = np.empty((num_seqs, seq_len), np.int32)
+    state = rng.integers(0, vocab, size=num_seqs)
+    for t in range(seq_len):
+        out[:, t] = state
+        choice = rng.integers(0, branching, size=num_seqs)
+        state = succ[state, choice]
+    return out
+
+
+def batches(arrays, batch_size: int, seed: int = 0, epochs: int = 10 ** 9):
+    """Shuffled minibatch iterator over aligned arrays."""
+    n = len(arrays[0])
+    rng = np.random.default_rng(seed)
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            idx = order[i:i + batch_size]
+            yield tuple(a[idx] for a in arrays)

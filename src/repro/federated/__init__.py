@@ -1,0 +1,6 @@
+from repro.federated.heterogeneity import (CAPABLE, TABLE_I, SimClock,
+                                           cycle_time, make_fleet)
+from repro.federated.runtime import Client, FLRun, setup_clients
+
+__all__ = ["FLRun", "Client", "setup_clients", "make_fleet", "cycle_time",
+           "SimClock", "TABLE_I", "CAPABLE"]

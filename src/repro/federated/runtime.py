@@ -1,0 +1,304 @@
+"""Federated round engines: Helios + the paper's four baselines (§VII.A).
+
+  helios   — soft-training stragglers, synchronous aggregation (this paper)
+  syn      — Synchronized FL: everyone trains the full model, wait for all
+  asyn     — Asynchronous FL: updates mixed in on arrival, no waiting
+  afo      — Asynchronous Federated Optimization (Xie et al. [6]):
+             staleness-discounted mixing
+  random   — Caldas et al. [12]: random sub-model of the expected volume
+             each cycle (no contribution top-k, no rotation regulation)
+  st_only  — Helios soft-training WITHOUT the Eq. 10 aggregation
+             optimization (the §VII.C ablation)
+
+Time is simulated (heterogeneity.cycle_time); accuracy is real (models train
+on real arrays).  The sync engines are also the reference semantics for the
+datacenter pjit path (launch/train.py), which fuses the same round into one
+compiled program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HeliosConfig, ModelConfig
+from repro.core import aggregation as AG
+from repro.core import masking as MK
+from repro.core import soft_train as ST
+from repro.core import volume as VOL
+from repro.core.identification import (DeviceProfile, identify_resource_based,
+                                       identify_time_based)
+from repro.federated.heterogeneity import SimClock, cycle_time
+from repro.models import build, init_params, logical_axes
+from repro.models.cnn import cnn_accuracy
+from repro.optim import apply_updates, make_optimizer
+
+
+@dataclasses.dataclass
+class Client:
+    cid: int
+    profile: DeviceProfile
+    data_idx: np.ndarray
+    volume: float = 1.0
+    helios_state: Optional[dict] = None
+    is_straggler: bool = False
+    staleness_anchor: int = 0          # round the client last pulled from
+
+
+@dataclasses.dataclass
+class FLRun:
+    """One engine execution: holds jitted steps + mutable server state."""
+
+    cfg: ModelConfig
+    hcfg: HeliosConfig
+    scheme: str
+    clients: List[Client]
+    images: np.ndarray
+    labels: np.ndarray
+    test_images: np.ndarray
+    test_labels: np.ndarray
+    batch_size: int = 32
+    local_steps: int = 5
+    lr: float = 0.05
+    seed: int = 0
+    eval_batch: int = 512
+
+    def __post_init__(self):
+        self.api = build(self.cfg)
+        self.axes = logical_axes(self.cfg)
+        self.global_params = init_params(jax.random.PRNGKey(self.seed),
+                                         self.cfg)
+        self.opt = make_optimizer("momentum", self.lr)
+        self.rng = np.random.default_rng(self.seed)
+        self.history: List[dict] = []
+        self.round = 0
+        self._init_helios()
+        self._jit()
+
+    # ------------------------------------------------------------------
+    def _init_helios(self):
+        for c in self.clients:
+            c.helios_state = ST.init_state(self.api.mask_schema,
+                                           volume=c.volume, seed=c.cid)
+
+    def _jit(self):
+        cfg, api = self.cfg, self.api
+
+        def local_train(params, batch_imgs, batch_labels, masks):
+            opt_state = self.opt.init(params)
+
+            def step(carry, b):
+                p, s = carry
+                imgs, labs = b
+
+                def loss_fn(p):
+                    return api.loss_fn(p, {"images": imgs, "labels": labs},
+                                       cfg, None, masks)
+
+                loss, grads = jax.value_and_grad(loss_fn)(p)
+                updates, s = self.opt.update(grads, s, p, 0)
+                p = apply_updates(p, updates)
+                return (p, s), loss
+
+            (params, _), losses = jax.lax.scan(step, (params, opt_state),
+                                               (batch_imgs, batch_labels))
+            return params, losses.mean()
+
+        self._local_train = jax.jit(local_train)
+        self._eval = jax.jit(lambda p, x, y: cnn_accuracy(p, x, y, cfg))
+
+    # ------------------------------------------------------------------
+    def _sample_batches(self, client: Client) -> tuple:
+        idx = client.data_idx
+        take = self.rng.choice(idx, size=(self.local_steps, self.batch_size),
+                               replace=len(idx) < self.local_steps * self.batch_size)
+        return self.images[take], self.labels[take]
+
+    def _client_masks(self, client: Client) -> dict:
+        if self.scheme in ("helios", "st_only", "random") and client.is_straggler:
+            return client.helios_state["masks"]
+        return {k: jnp.ones(s, jnp.float32)
+                for k, s in self.api.mask_schema.items()}
+
+    def _client_cycle(self, client: Client, base_params):
+        """One local training cycle; returns (new_params, masks, ratio)."""
+        hcfg = self.hcfg
+        if self.scheme == "random" and client.is_straggler:
+            # Caldas et al.: pure random selection, no top-k / rotation
+            hcfg = dataclasses.replace(self.hcfg, p_s=0.0,
+                                       rotation_threshold_auto=False,
+                                       rotation_threshold=10 ** 9)
+        if self.scheme in ("helios", "st_only", "random") and client.is_straggler:
+            client.helios_state = ST.begin_cycle(client.helios_state, hcfg)
+        masks = self._client_masks(client)
+        imgs, labs = self._sample_batches(client)
+        new_params, loss = self._local_train(base_params, imgs, labs, masks)
+        if self.scheme in ("helios", "st_only") and client.is_straggler:
+            scores = ST.cycle_scores(new_params, base_params, self.axes,
+                                     self.api.mask_schema, family="cnn")
+            client.helios_state = ST.end_cycle(client.helios_state, scores,
+                                               self.hcfg)
+        elif self.scheme == "random" and client.is_straggler:
+            client.helios_state = ST.end_cycle(
+                client.helios_state,
+                client.helios_state["scores"], hcfg)
+        ratio = float(MK.selected_fraction(masks))
+        return new_params, masks, ratio, float(loss)
+
+    def _aggregate(self, results):
+        """results: list of (params, masks, ratio)."""
+        params = [r[0] for r in results]
+        ratios = [r[2] for r in results]
+        if self.scheme == "helios":
+            mode = self.hcfg.aggregation
+        elif self.scheme in ("st_only", "random"):
+            mode = "uniform"
+        else:
+            mode = "uniform"
+        if mode == "masked_mean":
+            pmasks = [MK.cnn_expand_masks(r[1], self.global_params)
+                      for r in results]
+            self.global_params = AG.aggregate_masked_mean(
+                self.global_params, params, pmasks, ratios)
+        else:
+            self.global_params = AG.aggregate(mode, self.global_params,
+                                              params, ratios=ratios)
+
+    def evaluate(self) -> float:
+        n = min(self.eval_batch, len(self.test_labels))
+        return float(self._eval(self.global_params, self.test_images[:n],
+                                self.test_labels[:n]))
+
+    # ------------------------------------------------------------------
+    # engines
+    # ------------------------------------------------------------------
+    def run_sync(self, rounds: int, eval_every: int = 1) -> List[dict]:
+        """helios / st_only / random / syn."""
+        pace = float(np.median([cycle_time(c.profile, 1.0)
+                                for c in self.clients
+                                if not c.is_straggler])) or 1.0
+        clock = 0.0
+        for r in range(rounds):
+            results, times = [], []
+            for c in self.clients:
+                vol = c.volume if (self.scheme != "syn" and c.is_straggler) \
+                    else 1.0
+                t = cycle_time(c.profile, vol)
+                times.append(t)
+                results.append(self._client_cycle(c, self.global_params))
+                # volume adaptation toward the collaboration pace (§IV.C)
+                if self.scheme == "helios" and c.is_straggler and \
+                        self.hcfg.adapt_volume:
+                    c.volume = VOL.adapt_volume(c.volume, t, pace,
+                                                self.hcfg.adapt_gain,
+                                                self.hcfg.min_volume)
+                    c.helios_state = ST.set_volume(c.helios_state, c.volume)
+            self._aggregate(results)
+            clock += max(times)
+            self.round += 1
+            if r % eval_every == 0 or r == rounds - 1:
+                self.history.append({
+                    "scheme": self.scheme, "cycle": r + 1, "time": clock,
+                    "acc": self.evaluate(),
+                    "loss": float(np.mean([x[3] for x in results])),
+                    "volumes": [c.volume for c in self.clients]})
+        return self.history
+
+    def run_async(self, capable_cycles: int, mix_weight: float = 0.5,
+                  staleness_a: float = 0.5, eval_every: int = 1) -> List[dict]:
+        """asyn / afo: event-driven, no waiting for stragglers."""
+        clock = SimClock()
+        snapshots = {0: self.global_params}
+        for c in self.clients:
+            c.staleness_anchor = 0
+            clock.schedule(cycle_time(c.profile, 1.0), c.cid)
+        done_fast = 0
+        agg_counter = 0
+        by_id = {c.cid: c for c in self.clients}
+        while done_fast < capable_cycles and not clock.empty():
+            cid = clock.pop()
+            c = by_id[cid]
+            base = snapshots.get(c.staleness_anchor, self.global_params)
+            new_params, _, _, loss = self._client_cycle(c, base)
+            stale = agg_counter - c.staleness_anchor
+            w = mix_weight
+            if self.scheme == "afo":
+                w = mix_weight * AG.staleness_weight(stale, staleness_a)
+            self.global_params = AG.mix(self.global_params, new_params, w)
+            agg_counter += 1
+            snapshots[agg_counter] = self.global_params
+            if len(snapshots) > 64:
+                snapshots.pop(min(snapshots))
+            c.staleness_anchor = agg_counter
+            clock.schedule(cycle_time(c.profile, 1.0), cid)
+            if not c.is_straggler:
+                done_fast += 1
+                if done_fast % eval_every == 0:
+                    self.history.append({
+                        "scheme": self.scheme, "cycle": done_fast,
+                        "time": clock.now, "acc": self.evaluate(),
+                        "loss": loss, "staleness": stale})
+        return self.history
+
+    # ------------------------------------------------------------------
+    # elastic scalability (§VI.C)
+    # ------------------------------------------------------------------
+    def add_client(self, profile: DeviceProfile, data_idx: np.ndarray,
+                   white_box: bool = True) -> Client:
+        """New device joins mid-flight: identify -> assign volume -> admit."""
+        cid = max((c.cid for c in self.clients), default=-1) + 1
+        if white_box:
+            times, stragglers = identify_resource_based(
+                workload_gflop=100.0, memory_mb=200.0,
+                devices=[c.profile for c in self.clients] + [profile])
+            is_straggler = len(self.clients) in stragglers or \
+                profile.speed_factor > 1.5
+        else:
+            sim = [cycle_time(c.profile, 1.0) for c in self.clients] + \
+                [cycle_time(profile, 1.0)]
+            times, stragglers = identify_time_based(
+                lambda d: None, len(sim), simulated_times=sim)
+            is_straggler = len(self.clients) in stragglers
+        pace = float(np.median([cycle_time(c.profile, 1.0)
+                                for c in self.clients if not c.is_straggler])
+                     or [1.0])
+        vol = VOL.volume_from_profile(cycle_time(profile, 1.0), pace,
+                                      self.hcfg.min_volume) \
+            if is_straggler else 1.0
+        c = Client(cid=cid, profile=profile, data_idx=data_idx, volume=vol,
+                   is_straggler=is_straggler)
+        c.helios_state = ST.init_state(self.api.mask_schema, volume=vol,
+                                       seed=cid)
+        self.clients.append(c)
+        return c
+
+    def remove_client(self, cid: int) -> None:
+        self.clients = [c for c in self.clients if c.cid != cid]
+
+
+def setup_clients(profiles: Sequence[DeviceProfile],
+                  parts: Sequence[np.ndarray],
+                  hcfg: HeliosConfig,
+                  identification: str = "resource") -> List[Client]:
+    """Straggler identification (§IV.B) + volume targets (§IV.C)."""
+    n = len(profiles)
+    sim_times = [cycle_time(p, 1.0) for p in profiles]
+    if identification == "resource":
+        _, stragglers = identify_resource_based(
+            workload_gflop=100.0, memory_mb=200.0, devices=list(profiles))
+    else:
+        _, stragglers = identify_time_based(lambda d: None, n,
+                                            simulated_times=sim_times)
+    pace = float(np.median([t for i, t in enumerate(sim_times)
+                            if i not in stragglers]) or 1.0)
+    clients = []
+    for i, p in enumerate(profiles):
+        is_s = i in stragglers
+        vol = VOL.volume_from_profile(sim_times[i], pace, hcfg.min_volume) \
+            if is_s else 1.0
+        clients.append(Client(cid=i, profile=p, data_idx=parts[i],
+                              volume=vol, is_straggler=is_s))
+    return clients

@@ -1,0 +1,105 @@
+"""Blocked flash attention (pl.pallas_call + explicit BlockSpec VMEM tiling).
+
+The online-softmax schedule of models/layers.chunked_attention, expressed as
+a Pallas kernel so score blocks live in VMEM and never round-trip HBM — this
+removes the S^2 memory traffic that dominates the 32k-prefill memory roofline
+term (EXPERIMENTS.md §Perf quantifies the delta from the dry-run HLO).
+
+Grid: (batch*heads, Sq/bq, Sk/bk); the KV axis is innermost so the running
+(max, denom, acc) state stays in VMEM scratch across KV blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, d_ref, acc_ref,
+            *, scale: float, causal: bool, block_q: int, block_k: int,
+            n_k: int):
+    kv_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        d_ref[...] = jnp.zeros_like(d_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_idx = pl.program_id(1)
+    run = True
+    if causal:
+        # skip KV blocks strictly above the diagonal
+        run = kv_idx * block_k <= (q_idx + 1) * block_q - 1
+
+    @pl.when(run if causal else True)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)                   # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                   # (bk, hd)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = q_idx * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = kv_idx * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        d_ref[...] = d_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)                   # (bk, hd)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kv_idx == n_k - 1)
+    def _flush():
+        denom = jnp.maximum(d_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k",
+                                    "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, hd); k, v: (B, H, Sk, hd) — GQA repeat happens upstream.
+
+    Returns (B, H, Sq, hd).
+    """
+    b, h, sq, hd = q.shape
+    sk = k.shape[2]
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    scale = hd ** -0.5
+    n_k = sk // block_k
+
+    qr = q.reshape(b * h, sq, hd)
+    kr = k.reshape(b * h, sk, hd)
+    vr = v.reshape(b * h, sk, hd)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          block_q=block_q, block_k=block_k, n_k=n_k),
+        grid=(b * h, sq // block_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),         # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),         # running denom
+            pltpu.VMEM((block_q, hd), jnp.float32),        # output acc
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, hd)

@@ -1,0 +1,56 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute with ``interpret=True`` — the kernel
+body runs as traced JAX ops, bit-compatible semantics for correctness tests.
+On TPU they compile natively.  ``INTERPRET`` is derived from the backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.masked_matmul import masked_matmul as _masked_matmul
+from repro.kernels.ssd_scan import ssd_diag as _ssd_diag
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def masked_matmul(x, w, unit_mask, *, block_n: int = 128, block_m: int = 128,
+                  block_k: int = 128):
+    """Soft-training matmul: y = x @ (w * unit_mask), block-sparse skip.
+
+    unit_mask: (N,) 0/1 — must be block-aligned for exact skipping; the
+    helper collapses it to per-block alive flags (a block with ANY live unit
+    runs; Helios block-aligned selection makes mask == block structure).
+    """
+    n = w.shape[1]
+    nb = n // block_n
+    alive = unit_mask.reshape(nb, block_n).max(axis=1)
+    return _masked_matmul(x, w, alive, block_m=block_m, block_n=block_n,
+                          block_k=block_k, interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    """q,k,v: (B, H, S, hd) -> (B, H, S, hd)."""
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                  interpret=_interpret())
+
+
+def ssd_diag(cr, br, cum, dtx):
+    return _ssd_diag(cr, br, cum, dtx, interpret=_interpret())
+
+
+def block_align_mask(unit_mask: jax.Array, block_n: int) -> jax.Array:
+    """Round a Helios unit mask UP to block granularity (beyond-paper:
+    block-aligned selection keeps the MXU dense within live blocks)."""
+    n = unit_mask.shape[-1]
+    nb = (n + block_n - 1) // block_n
+    pad = nb * block_n - n
+    m = jnp.pad(unit_mask, [(0, 0)] * (unit_mask.ndim - 1) + [(0, pad)])
+    blocks = m.reshape(m.shape[:-1] + (nb, block_n)).max(axis=-1)
+    out = jnp.repeat(blocks, block_n, axis=-1)
+    return out[..., :n]

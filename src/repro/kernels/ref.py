@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_matmul_ref(x, w, block_alive, block_n: int):
+    """y = x @ (w * column-block mask)."""
+    n = w.shape[1]
+    mask = jnp.repeat(block_alive.astype(w.dtype), block_n)[:n]
+    return x @ (w * mask[None, :])
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """Dense softmax attention. q,k,v: (B, H, S, hd)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhqk,bhsk->bhqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = s.shape[-2], s.shape[-1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bhsk->bhqk", p, v.astype(jnp.float32)).astype(
+        q.dtype)
+
+
+def ssd_diag_ref(cr, br, cum, dtx):
+    """Intra-chunk SSD diagonal term (the einsum form from models/ssm.py)."""
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (b,nc,L,L,nh)
+    L = cr.shape[2]
+    tril = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(tril[None, None, :, :, None],
+                      jnp.exp(seg.astype(jnp.float32)), 0.0)
+    cb = jnp.einsum("bnli,bnmi->bnlm", cr.astype(jnp.float32),
+                    br.astype(jnp.float32))
+    return jnp.einsum("bnlm,bnlmh,bnmhp->bnlhp", cb, decay,
+                      dtx.astype(jnp.float32)).astype(dtx.dtype)

@@ -1,0 +1,69 @@
+"""Mamba2 SSD intra-chunk kernel (pl.pallas_call + BlockSpec VMEM tiling).
+
+Computes the FLOP-dominant diagonal-block term of the chunked SSD algorithm
+for one (batch-chunk, head) tile entirely in VMEM:
+
+    y[l, p] = sum_{m<=l} (C_l . B_m) * exp(cum_a[l] - cum_a[m]) * dtx[m, p]
+
+(models/ssm.ssd_chunked computes the same quantity with materialized
+(L, L, nh) decay tensors in HBM — the kernel keeps them in VMEM.)
+Grid: (batch*chunks, heads).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(c_ref, b_ref, cum_ref, dtx_ref, o_ref):
+    c = c_ref[0].astype(jnp.float32)                       # (L, ds)
+    b = b_ref[0].astype(jnp.float32)                       # (L, ds)
+    cum = cum_ref[0, :, 0].astype(jnp.float32)             # (L,)
+    dtx = dtx_ref[0, :, 0, :].astype(jnp.float32)          # (L, hd)
+
+    L = c.shape[0]
+    cb = jnp.dot(c, b.T, preferred_element_type=jnp.float32)   # (L, L)
+    seg = cum[:, None] - cum[None, :]
+    li = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    mi = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where(li >= mi, jnp.exp(seg), 0.0)
+    scores = cb * decay                                        # (L, L)
+    o_ref[0, :, 0, :] = jnp.dot(
+        scores, dtx, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_diag(cr: jax.Array, br: jax.Array, cum: jax.Array, dtx: jax.Array,
+             *, interpret: bool = False) -> jax.Array:
+    """Intra-chunk SSD.
+
+    cr, br: (B, nc, L, ds); cum: (B, nc, L, nh); dtx: (B, nc, L, nh, hd).
+    Returns y_diag: (B, nc, L, nh, hd).
+    """
+    b, nc, L, ds = cr.shape
+    nh = cum.shape[-1]
+    hd = dtx.shape[-1]
+    g = b * nc
+
+    crf = cr.reshape(g, L, ds)
+    brf = br.reshape(g, L, ds)
+    cumf = cum.reshape(g, L, nh)
+    dtxf = dtx.reshape(g, L, nh, hd)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(g, nh),
+        in_specs=[
+            pl.BlockSpec((1, L, ds), lambda i, h: (i, 0, 0)),
+            pl.BlockSpec((1, L, ds), lambda i, h: (i, 0, 0)),
+            pl.BlockSpec((1, L, 1), lambda i, h: (i, 0, h)),
+            pl.BlockSpec((1, L, 1, hd), lambda i, h: (i, 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, L, 1, hd), lambda i, h: (i, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, L, nh, hd), dtx.dtype),
+        interpret=interpret,
+    )(crf, brf, cumf, dtxf)
+    return out.reshape(b, nc, L, nh, hd)

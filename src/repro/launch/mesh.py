@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state.  Single pod: (16, 16) = 256 chips
+(data, model).  Multi-pod: (2, 16, 16) = 512 chips (pod, data, model) — the
+"pod" axis is the FL-client axis in the Helios datacenter mapping
+(DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    # REPRO_MESH="4x4" / "2x2x4" overrides the chip count for scaled-down CI
+    # runs of the same code path (tests/test_dryrun_small.py).
+    override = os.environ.get("REPRO_MESH")
+    if override:
+        shape = tuple(int(x) for x in override.split("x"))
+        axes = ("pod", "data", "model") if len(shape) == 3 else \
+            ("data", "model")
+        return jax.make_mesh(shape, axes)
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None, *, multi_pod: bool = False):
+    """Small mesh over however many (host) devices exist — used by tests."""
+    n = n_devices or len(jax.devices())
+    if multi_pod and n >= 8:
+        return jax.make_mesh((2, 2, n // 4), ("pod", "data", "model"))
+    if n >= 4:
+        return jax.make_mesh((2, n // 2), ("data", "model"))
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,310 @@
+"""Compiled step factories: train_step / prefill_step / serve_step /
+fl_round_step, plus abstract state builders and sharding trees.
+
+``train_step`` integrates Helios as a first-class feature: the state carries
+the soft-training masks + contribution scores; masked units are excluded from
+the forward pass (zero grads) and from optimizer updates (no decay drift),
+and per-unit |grad| scores accumulate via EMA for the next cycle's selection
+(mask RE-SELECTION happens at round boundaries on the host — cheap, O(units)).
+
+``fl_round_step`` is the datacenter FL mapping: params are STACKED per client
+(leading dim sharded over the "pod" axis -> each pod holds only its own
+replica), every client runs E local steps (lax.scan), then Eq. 10
+alpha-weighted aggregation collapses the client dim — compiling to one
+all-reduce over the pod axis per round (local-SGD round fusion).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (HeliosConfig, ModelConfig, ShapeConfig,
+                                TrainConfig)
+from repro.core import masking as MK
+from repro.core import soft_train as ST
+from repro.models import (abstract_params, build, decode_cache_specs,
+                          default_runtime, input_specs, logical_axes)
+from repro.optim import (apply_updates, clip_by_global_norm, make_optimizer,
+                         warmup_cosine_schedule)
+from repro.parallel import sharding as SH
+
+# ---------------------------------------------------------------------------
+# dtype policy
+# ---------------------------------------------------------------------------
+
+_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+           "float16": jnp.float16}
+
+
+def _dt(name: str):
+    return _DTYPES[name]
+
+
+def abstract_params_typed(cfg: ModelConfig, tcfg: TrainConfig):
+    return abstract_params(cfg, _dt(tcfg.param_dtype))
+
+
+def make_opt(cfg: ModelConfig, tcfg: TrainConfig):
+    sched = warmup_cosine_schedule(tcfg.learning_rate, tcfg.warmup_steps,
+                                   tcfg.total_steps)
+    return make_optimizer(tcfg.optimizer, sched, b1=tcfg.beta1, b2=tcfg.beta2,
+                          eps=tcfg.eps, weight_decay=tcfg.weight_decay)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, hcfg: HeliosConfig, tcfg: TrainConfig,
+                    rt: dict):
+    api = build(cfg)
+    axes = logical_axes(cfg)
+    schema = api.mask_schema
+    opt = make_opt(cfg, tcfg)
+    cdt = _dt(tcfg.compute_dtype)
+
+    def loss_fn(params, batch, masks):
+        p = jax.tree.map(lambda t: t.astype(cdt) if t.dtype == jnp.float32
+                         and cdt != jnp.float32 else t, params)
+        return api.loss_fn(p, batch, cfg, rt, masks)
+
+    def train_step(state, batch):
+        params = state["params"]
+        masks = state["helios"]["masks"] if hcfg.enabled else None
+
+        if tcfg.microbatches > 1:
+            m = tcfg.microbatches
+            batch_r = jax.tree.map(
+                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]),
+                batch)
+
+            def mb(carry, b):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, b, masks)
+                g_acc = jax.tree.map(lambda a, gg: a + gg.astype(jnp.float32),
+                                     g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (gsum, lsum), _ = jax.lax.scan(mb, (zeros, 0.0), batch_r)
+            grads = jax.tree.map(lambda g: g / m, gsum)
+            loss = lsum / m
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch, masks)
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        updates, opt_state = opt.update(grads, state["opt"], params,
+                                        state["step"])
+        if hcfg.enabled:
+            um = MK.expand_masks(axes, masks, updates)
+            updates = MK.apply_mask_tree(updates, um)
+        params = apply_updates(params, updates)
+
+        helios = state["helios"]
+        if hcfg.enabled:
+            snew = ST.grad_scores(grads, axes, schema,
+                                  "cnn" if cfg.family == "cnn" else "lm")
+            helios = {**helios,
+                      "scores": {k: hcfg.contribution_ema * helios["scores"][k]
+                                 + (1 - hcfg.contribution_ema) * snew[k]
+                                 for k in snew}}
+
+        new_state = {"params": params, "opt": opt_state,
+                     "step": state["step"] + 1, "helios": helios}
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def abstract_train_state(cfg: ModelConfig, hcfg: HeliosConfig,
+                         tcfg: TrainConfig):
+    params = abstract_params(cfg, _dt(tcfg.param_dtype))
+    opt = make_opt(cfg, tcfg)
+    opt_state = jax.eval_shape(opt.init, params)
+    api = build(cfg)
+    helios = jax.eval_shape(
+        functools.partial(ST.init_state, api.mask_schema, 1.0, 0))
+    return {"params": params, "opt": opt_state,
+            "step": jax.ShapeDtypeStruct((), jnp.int32), "helios": helios}
+
+
+def train_state_shardings(cfg: ModelConfig, state_abs, mesh):
+    axes = logical_axes(cfg)
+    pshard = SH.param_shardings(axes, state_abs["params"], mesh,
+                                SH.rules_for(cfg))
+    # moment buffers mirror the params tree -> inherit param shardings
+    if isinstance(state_abs["opt"], dict) and \
+            set(state_abs["opt"]) <= {"m", "v"}:
+        opt_shard = {k: pshard for k in state_abs["opt"]}
+    else:
+        opt_shard = SH.replicated(state_abs["opt"], mesh)
+    return {"params": pshard, "opt": opt_shard,
+            "step": SH.replicated(state_abs["step"], mesh),
+            "helios": SH.replicated(state_abs["helios"], mesh)}
+
+
+def init_train_state(key, cfg: ModelConfig, hcfg: HeliosConfig,
+                     tcfg: TrainConfig):
+    from repro.models import init_params
+    params = init_params(key, cfg, _dt(tcfg.param_dtype))
+    opt = make_opt(cfg, tcfg)
+    api = build(cfg)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.asarray(0, jnp.int32),
+            "helios": ST.init_state(api.mask_schema, 1.0, 0)}
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, rt: dict):
+    api = build(cfg)
+
+    def prefill_step(params, batch):
+        return api.prefill_fn(params, batch, cfg, rt, None)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, rt: dict):
+    api = build(cfg)
+
+    def serve_step(params, token, cache):
+        return api.decode_fn(params, token, cache, cfg, rt, None)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# federated round step (multi-pod: pods = FL clients)
+# ---------------------------------------------------------------------------
+
+
+def make_fl_round_step(cfg: ModelConfig, hcfg: HeliosConfig,
+                       tcfg: TrainConfig, rt: dict, num_clients: int):
+    """One FL round fused into a single compiled program.
+
+    state["params"]/["opt"]/["helios"] carry a leading client dim (C, ...)
+    sharded over "pod"; batch is (C, E, per-client-batch, ...).  Aggregation
+    = Eq. 10 alpha-weighted mean over the client dim (one all-reduce across
+    pods per round), after which every client restarts from the new global.
+    """
+    api = build(cfg)
+    axes = logical_axes(cfg)
+    schema = api.mask_schema
+    opt = make_opt(cfg, tcfg)
+
+    def client_round(params, opt_state, helios, cbatch, step):
+        masks = helios["masks"] if hcfg.enabled else None
+
+        def one_step(carry, b):
+            p, s = carry
+            loss, grads = jax.value_and_grad(
+                lambda pp: api.loss_fn(pp, b, cfg, rt, masks))(p)
+            grads, _ = clip_by_global_norm(grads, tcfg.grad_clip)
+            updates, s = opt.update(grads, s, p, step)
+            if hcfg.enabled:
+                um = MK.expand_masks(axes, masks, updates)
+                updates = MK.apply_mask_tree(updates, um)
+            return (apply_updates(p, updates), s), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            one_step, (params, opt_state), cbatch)
+        return params, opt_state, losses.mean()
+
+    def fl_round_step(state, batch):
+        params, opt_state, helios = state["params"], state["opt"], state["helios"]
+        new_p, new_o, losses = jax.vmap(
+            lambda p, o, h, b: client_round(p, o, h, b, state["step"])
+        )(params, opt_state, helios, batch)
+
+        # Eq. 10: alpha_n = r_n / sum r_m from each client's mask fraction
+        if hcfg.enabled:
+            ratios = jax.vmap(
+                lambda h: MK.selected_fraction(h["masks"]))(helios)
+        else:
+            ratios = jnp.ones((num_clients,), jnp.float32)
+        alpha = ratios / jnp.maximum(ratios.sum(), 1e-9)
+
+        agg = jax.tree.map(
+            lambda t: jnp.tensordot(alpha.astype(jnp.float32),
+                                    t.astype(jnp.float32), axes=1
+                                    ).astype(t.dtype), new_p)
+        # every client restarts from the new global model
+        bcast = jax.tree.map(
+            lambda g: jnp.broadcast_to(g[None], (num_clients,) + g.shape), agg)
+        new_state = {"params": bcast, "opt": new_o,
+                     "step": state["step"] + jnp.asarray(1, jnp.int32),
+                     "helios": helios}
+        return new_state, {"loss": losses.mean(), "alpha": alpha}
+
+    return fl_round_step
+
+
+def abstract_fl_state(cfg: ModelConfig, hcfg: HeliosConfig, tcfg: TrainConfig,
+                      num_clients: int):
+    base = abstract_train_state(cfg, hcfg, tcfg)
+
+    def stackify(tree):
+        return jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((num_clients,) + l.shape, l.dtype),
+            tree)
+
+    return {"params": stackify(base["params"]), "opt": stackify(base["opt"]),
+            "step": base["step"], "helios": stackify(base["helios"])}
+
+
+def fl_state_shardings(cfg: ModelConfig, state_abs, mesh):
+    """Client dim -> 'pod'; inner dims follow the usual rules."""
+    axes = logical_axes(cfg)
+    stacked_axes = jax.tree.map(
+        lambda a: ("clients",) + a, axes,
+        is_leaf=lambda x: isinstance(x, tuple) and
+        all(isinstance(e, (str, type(None))) for e in x))
+    rules = dict(SH.rules_for(cfg))
+    rules["clients"] = ("pod",)
+    pshard = SH.param_shardings(stacked_axes, state_abs["params"], mesh,
+                                rules)
+    if isinstance(state_abs["opt"], dict) and \
+            set(state_abs["opt"]) <= {"m", "v"}:
+        opt_shard = {k: pshard for k in state_abs["opt"]}
+    else:
+        opt_shard = SH.replicated(state_abs["opt"], mesh)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    helios_shard = jax.tree.map(
+        lambda l: NamedSharding(mesh, P(*(("pod",) + (None,) * (l.ndim - 1)))
+                                if l.ndim >= 1 and l.shape[0] ==
+                                jax.tree.leaves(state_abs["params"])[0].shape[0]
+                                else P()),
+        state_abs["helios"])
+    return {"params": pshard, "opt": opt_shard,
+            "step": SH.replicated(state_abs["step"], mesh),
+            "helios": helios_shard}
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeConfig, tcfg: TrainConfig):
+    return input_specs(cfg, shape, embed_dtype=_dt(tcfg.compute_dtype))
+
+
+def fl_abstract_batch(cfg: ModelConfig, shape: ShapeConfig, tcfg: TrainConfig,
+                      num_clients: int, local_steps: int):
+    base = input_specs(cfg, shape, embed_dtype=_dt(tcfg.compute_dtype))
+
+    def stackify(l):
+        per_client = l.shape[0] // num_clients
+        return jax.ShapeDtypeStruct(
+            (num_clients, local_steps, per_client) + l.shape[1:], l.dtype)
+
+    return jax.tree.map(stackify, base)

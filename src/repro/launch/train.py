@@ -1,0 +1,115 @@
+"""Training driver (runs for real on CPU; same step code the dry-run lowers).
+
+Integrates the full stack: config registry -> model zoo -> Helios
+soft-training state -> optimizer -> checkpointing (restart-safe) -> data
+pipeline.  Helios mask re-selection happens at cycle boundaries
+(``--cycle-steps``), exactly like the FL runtime's begin/end_cycle.
+
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --reduced \
+      --steps 200 --batch 8 --seq 128 --volume 0.5 --ckpt-dir /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore, save
+from repro.configs import (HeliosConfig, ShapeConfig, TrainConfig,
+                           get_model_config, reduced as reduce_cfg)
+from repro.core import soft_train as ST
+from repro.data.synthetic import markov_tokens
+from repro.launch import steps as S
+from repro.models import build, default_runtime
+
+
+def make_step(cfg, hcfg, tcfg, rt):
+    return jax.jit(S.make_train_step(cfg, hcfg, tcfg, rt))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config of the same family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--volume", type=float, default=1.0,
+                    help="Helios soft-training volume P (1.0 = full model)")
+    ap.add_argument("--cycle-steps", type=int, default=20,
+                    help="soft-training cycle length (mask re-selection)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_model_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    hcfg = HeliosConfig(enabled=True, contribution="grad_ema")
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       warmup_steps=max(1, args.steps // 20))
+    shape = ShapeConfig("cli", "train", args.seq, args.batch)
+    rt = default_runtime(cfg, shape)
+
+    step_fn = make_step(cfg, hcfg, tcfg, rt)
+    state = S.init_train_state(jax.random.PRNGKey(args.seed), cfg, hcfg, tcfg)
+    state["helios"] = ST.set_volume(state["helios"], args.volume)
+
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        state, start = restore(args.ckpt_dir, state)
+        print(f"resumed from step {start}")
+
+    data = markov_tokens(max(64, args.batch * 8), args.seq + 1,
+                         cfg.padded_vocab, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+
+    n_params = sum(p.size for p in jax.tree.leaves(state["params"]))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M volume={args.volume} "
+          f"steps={args.steps} tokens/step={args.batch * args.seq}")
+
+    losses = []
+    t0 = time.time()
+    for i in range(start, args.steps):
+        if hcfg.enabled and i % args.cycle_steps == 0:
+            state["helios"] = ST.begin_cycle(state["helios"], hcfg)
+        idx = rng.integers(0, len(data), args.batch)
+        batch = {"tokens": jnp.asarray(data[idx, :args.seq])}
+        if cfg.family == "vlm":
+            n_img = cfg.num_image_tokens
+            batch = {"tokens": jnp.asarray(data[idx, :args.seq - n_img]),
+                     "image_embeds": jnp.asarray(
+                         rng.normal(size=(args.batch, n_img, cfg.d_model)),
+                         jnp.float32)}
+        elif cfg.family == "encdec":
+            batch["enc_embeds"] = jnp.asarray(
+                rng.normal(size=(args.batch, args.seq, cfg.d_model)),
+                jnp.float32)
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {i:5d} loss {losses[-1]:.4f} "
+                  f"grad_norm {float(metrics['grad_norm']):.3f} "
+                  f"({dt / max(1, len(losses)):.2f}s/step)", flush=True)
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            save(args.ckpt_dir, i + 1, state,
+                 metadata={"arch": cfg.name, "loss": losses[-1]})
+    if args.ckpt_dir:
+        save(args.ckpt_dir, args.steps, state, metadata={"arch": cfg.name})
+    first = np.mean(losses[:5]) if len(losses) >= 5 else losses[0]
+    last = np.mean(losses[-5:])
+    print(f"loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

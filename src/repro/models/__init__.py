@@ -1,0 +1,8 @@
+from repro.models.api import (ModelAPI, abstract_params, build,
+                              decode_cache_specs, default_runtime,
+                              init_params, input_specs, logical_axes,
+                              make_full_masks)
+
+__all__ = ["ModelAPI", "build", "init_params", "abstract_params",
+           "logical_axes", "input_specs", "decode_cache_specs",
+           "default_runtime", "make_full_masks"]

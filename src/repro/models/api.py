@@ -1,0 +1,141 @@
+"""Unified model API: family dispatch + abstract input/cache specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every model
+input (weak-type-correct, shardable, no device allocation) — the dry-run
+lowers against these.  Decode-cache specs are derived with ``jax.eval_shape``
+over the prefill function so they always match the real cache layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import cnn, encdec, hybrid, transformer, xlstm
+from repro.models import module as M
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    spec: Any
+    loss_fn: Callable          # (params, batch, cfg, rt, masks) -> scalar
+    prefill_fn: Optional[Callable]
+    decode_fn: Optional[Callable]
+    mask_schema: Dict[str, tuple]
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return ModelAPI(cfg, transformer.lm_spec(cfg), transformer.lm_loss,
+                        transformer.lm_prefill, transformer.lm_decode,
+                        transformer.mask_schema(cfg))
+    if cfg.family == "encdec":
+        return ModelAPI(cfg, encdec.encdec_spec(cfg), encdec.encdec_loss,
+                        encdec.encdec_prefill, encdec.encdec_decode,
+                        encdec.mask_schema(cfg))
+    if cfg.family == "hybrid":
+        return ModelAPI(cfg, hybrid.hybrid_spec(cfg), hybrid.hybrid_loss,
+                        hybrid.hybrid_prefill, hybrid.hybrid_decode,
+                        hybrid.mask_schema(cfg))
+    if cfg.family == "ssm":
+        return ModelAPI(cfg, xlstm.xlstm_spec(cfg), xlstm.xlstm_loss,
+                        xlstm.xlstm_prefill, xlstm.xlstm_decode,
+                        xlstm.xlstm_mask_schema(cfg))
+    if cfg.family == "cnn":
+        return ModelAPI(cfg, cnn.cnn_spec(cfg), cnn.cnn_loss, None, None,
+                        cnn.cnn_mask_schema(cfg))
+    raise ValueError(cfg.family)
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    return M.init_params(key, build(cfg).spec, dtype)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32):
+    return M.abstract_params(build(cfg).spec, dtype)
+
+
+def logical_axes(cfg: ModelConfig):
+    return M.logical_axes(build(cfg).spec)
+
+
+def default_runtime(cfg: ModelConfig, shape: Optional[ShapeConfig] = None,
+                    moe_groups: int = 1) -> dict:
+    """Execution knobs threaded through the model functions."""
+    long_seq = shape is not None and shape.seq_len >= 8192 and \
+        shape.kind != "decode"
+    return {
+        "attn_impl": "chunked" if long_seq else "auto",
+        "moe_impl": "grouped",
+        "moe_groups": moe_groups,
+        "remat": True,
+        "rope": True,
+        # activation sharding constraints (PartitionSpec), set by the launch
+        # layer under a mesh context; None = no constraint (tests, smoke)
+        "act_spec": None,
+        "logits_spec": None,
+        "kv_spec": None,
+    }
+
+
+def make_full_masks(cfg: ModelConfig, dtype=jnp.float32):
+    """All-ones Helios masks (no compression) matching the mask schema."""
+    return {k: jnp.ones(s, dtype) for k, s in build(cfg).mask_schema.items()}
+
+
+# ---------------------------------------------------------------------------
+# Abstract input specs per (family x kind)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                embed_dtype=jnp.float32) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the model inputs of one cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def sds(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if cfg.family == "cnn":
+        return {"images": sds((b, cfg.image_size, cfg.image_size,
+                               cfg.in_channels), embed_dtype),
+                "labels": sds((b,), i32)}
+
+    if shape.kind == "decode":
+        return {"token": sds((b, 1), i32)}
+
+    if cfg.family == "encdec":
+        return {"enc_embeds": sds((b, s, cfg.d_model), embed_dtype),
+                "tokens": sds((b, s), i32)}
+    if cfg.family == "vlm":
+        n_img = cfg.num_image_tokens
+        return {"tokens": sds((b, s - n_img), i32),
+                "image_embeds": sds((b, n_img, cfg.d_model), embed_dtype)}
+    return {"tokens": sds((b, s), i32)}
+
+
+def decode_cache_specs(cfg: ModelConfig, shape: ShapeConfig, rt: dict,
+                       param_dtype=jnp.float32):
+    """Cache ShapeDtypeStructs for a serve_step cell, via eval_shape(prefill).
+
+    The cache covers ``shape.seq_len`` positions (the assignment's "one new
+    token with a KV cache of seq_len").
+    """
+    api = build(cfg)
+    params = abstract_params(cfg, param_dtype)
+    prompt = ShapeConfig(shape.name, "prefill", shape.seq_len,
+                         shape.global_batch)
+    batch = input_specs(cfg, prompt, embed_dtype=param_dtype)
+    masks = {k: jax.ShapeDtypeStruct(s, jnp.float32)
+             for k, s in api.mask_schema.items()}
+
+    def run(p, b, m):
+        return api.prefill_fn(p, b, cfg, rt, m)
+
+    _, cache = jax.eval_shape(run, params, batch, masks)
+    return cache

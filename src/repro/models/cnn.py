@@ -1,0 +1,225 @@
+"""The paper's CNN testbed: LeNet-5, CIFAR-scale AlexNet, ResNet-18.
+
+These run the faithful FL reproduction (Fig. 5-7).  BatchNorm is replaced by
+GroupNorm — standard practice in FL where per-client batch statistics diverge
+(noted in DESIGN.md §7).  Helios maskable unit: conv ``filters`` and dense
+hidden units; masks are applied to layer OUTPUT channels so masked filters
+receive zero gradients (soft-training semantics).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.module import P
+
+
+def _conv(name, kh, kw, cin, cout):
+    return {f"{name}_w": P((kh, kw, cin, cout), (None, None, "embed", "filters")),
+            f"{name}_b": P((cout,), ("filters",), init="zeros")}
+
+
+def _dense(name, din, dout, unit_axis="filters"):
+    return {f"{name}_w": P((din, dout), ("embed", unit_axis)),
+            f"{name}_b": P((dout,), (unit_axis,), init="zeros")}
+
+
+def conv2d(x, w, b, stride=1, padding="SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def group_norm(x, groups=8, eps=1e-5):
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    xg = x.reshape(n, h, w, g, c // g)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    return ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(n, h, w, c)
+
+
+def avg_pool(x, k=2):
+    return jax.lax.reduce_window(x, 0.0, jax.lax.add, (1, k, k, 1),
+                                 (1, k, k, 1), "VALID") / (k * k)
+
+
+def max_pool(x, k=2, s=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, k, k, 1),
+                                 (1, s, s, 1), "VALID")
+
+
+def _m(masks, key):
+    if masks is None or key not in masks:
+        return None
+    v = masks[key]
+    return v[0] if v.ndim == 2 else v
+
+
+def _apply(x, mask):
+    return x if mask is None else x * mask
+
+
+# ---------------------------------------------------------------------------
+# LeNet-5
+# ---------------------------------------------------------------------------
+
+
+def lenet_spec(cfg: ModelConfig):
+    c1, c2 = cfg.cnn_channels
+    side = cfg.image_size // 4
+    return {**_conv("conv0", 5, 5, cfg.in_channels, c1),
+            **_conv("conv1", 5, 5, c1, c2),
+            **_dense("fc0", side * side * c2, 120),
+            **_dense("fc1", 120, 84),
+            **_dense("head", 84, cfg.num_classes, unit_axis=None)}
+
+
+def lenet_mask_schema(cfg: ModelConfig) -> Dict[str, tuple]:
+    c1, c2 = cfg.cnn_channels
+    return {"conv0": (1, c1), "conv1": (1, c2), "fc0": (1, 120), "fc1": (1, 84)}
+
+
+def lenet_fwd(params, x, cfg, masks=None):
+    x = jnp.tanh(conv2d(x, params["conv0_w"], params["conv0_b"]))
+    x = _apply(x, _m(masks, "conv0"))
+    x = avg_pool(x)
+    x = jnp.tanh(conv2d(x, params["conv1_w"], params["conv1_b"]))
+    x = _apply(x, _m(masks, "conv1"))
+    x = avg_pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = _apply(jnp.tanh(x @ params["fc0_w"] + params["fc0_b"]), _m(masks, "fc0"))
+    x = _apply(jnp.tanh(x @ params["fc1_w"] + params["fc1_b"]), _m(masks, "fc1"))
+    return x @ params["head_w"] + params["head_b"]
+
+
+# ---------------------------------------------------------------------------
+# AlexNet (CIFAR-scale)
+# ---------------------------------------------------------------------------
+
+
+def alexnet_spec(cfg: ModelConfig):
+    cs = cfg.cnn_channels
+    spec = {}
+    cin = cfg.in_channels
+    for i, c in enumerate(cs):
+        spec.update(_conv(f"conv{i}", 3, 3, cin, c))
+        cin = c
+    side = cfg.image_size // 8
+    spec.update(_dense("fc0", side * side * cs[-1], 1024))
+    spec.update(_dense("fc1", 1024, 512))
+    spec.update(_dense("head", 512, cfg.num_classes, unit_axis=None))
+    return spec
+
+
+def alexnet_mask_schema(cfg: ModelConfig) -> Dict[str, tuple]:
+    out = {f"conv{i}": (1, c) for i, c in enumerate(cfg.cnn_channels)}
+    out.update({"fc0": (1, 1024), "fc1": (1, 512)})
+    return out
+
+
+def alexnet_fwd(params, x, cfg, masks=None):
+    cs = cfg.cnn_channels
+    pool_after = {0, 1, len(cs) - 1}
+    for i in range(len(cs)):
+        x = jax.nn.relu(conv2d(x, params[f"conv{i}_w"], params[f"conv{i}_b"]))
+        x = _apply(x, _m(masks, f"conv{i}"))
+        if i in pool_after:
+            x = max_pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = _apply(jax.nn.relu(x @ params["fc0_w"] + params["fc0_b"]), _m(masks, "fc0"))
+    x = _apply(jax.nn.relu(x @ params["fc1_w"] + params["fc1_b"]), _m(masks, "fc1"))
+    return x @ params["head_w"] + params["head_b"]
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18 (GroupNorm)
+# ---------------------------------------------------------------------------
+
+
+def resnet18_spec(cfg: ModelConfig):
+    ws = cfg.cnn_channels                     # (64, 128, 256, 512)
+    spec = {**_conv("stem", 3, 3, cfg.in_channels, ws[0])}
+    cin = ws[0]
+    for s, w in enumerate(ws):
+        for b in range(2):
+            spec.update(_conv(f"s{s}b{b}c0", 3, 3, cin if b == 0 else w, w))
+            spec.update(_conv(f"s{s}b{b}c1", 3, 3, w, w))
+            if b == 0 and cin != w:
+                spec.update(_conv(f"s{s}proj", 1, 1, cin, w))
+        cin = w
+    spec.update(_dense("head", ws[-1], cfg.num_classes, unit_axis=None))
+    return spec
+
+
+def resnet18_mask_schema(cfg: ModelConfig) -> Dict[str, tuple]:
+    out = {}
+    for s, w in enumerate(cfg.cnn_channels):
+        for b in range(2):
+            out[f"s{s}b{b}c0"] = (1, w)       # first conv of each block
+    return out
+
+
+def resnet18_fwd(params, x, cfg, masks=None):
+    ws = cfg.cnn_channels
+    x = jax.nn.relu(group_norm(conv2d(x, params["stem_w"], params["stem_b"])))
+    cin = ws[0]
+    for s, w in enumerate(ws):
+        for b in range(2):
+            stride = 2 if (b == 0 and s > 0) else 1
+            h = conv2d(x, params[f"s{s}b{b}c0_w"], params[f"s{s}b{b}c0_b"],
+                       stride=stride)
+            h = jax.nn.relu(group_norm(h))
+            h = _apply(h, _m(masks, f"s{s}b{b}c0"))
+            h = conv2d(h, params[f"s{s}b{b}c1_w"], params[f"s{s}b{b}c1_b"])
+            h = group_norm(h)
+            if b == 0 and cin != w:
+                x = conv2d(x, params[f"s{s}proj_w"], params[f"s{s}proj_b"],
+                           stride=stride)
+            elif stride != 1:
+                x = avg_pool(x, stride)
+            x = jax.nn.relu(x + h)
+        cin = w
+    x = x.mean(axis=(1, 2))
+    return x @ params["head_w"] + params["head_b"]
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+_SPECS = {"lenet": lenet_spec, "alexnet": alexnet_spec, "resnet18": resnet18_spec}
+_FWDS = {"lenet": lenet_fwd, "alexnet": alexnet_fwd, "resnet18": resnet18_fwd}
+_SCHEMAS = {"lenet": lenet_mask_schema, "alexnet": alexnet_mask_schema,
+            "resnet18": resnet18_mask_schema}
+
+
+def cnn_spec(cfg):
+    return _SPECS[cfg.name](cfg)
+
+
+def cnn_mask_schema(cfg):
+    return _SCHEMAS[cfg.name](cfg)
+
+
+def cnn_logits(params, images, cfg, masks=None):
+    return _FWDS[cfg.name](params, images, cfg, masks)
+
+
+def cnn_loss(params, batch, cfg, rt=None, masks=None, active_mlp_idx=None):
+    logits = cnn_logits(params, batch["images"], cfg, masks)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def cnn_accuracy(params, images, labels, cfg, masks=None):
+    logits = cnn_logits(params, images, cfg, masks)
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

@@ -1,0 +1,198 @@
+"""Encoder-decoder assembly (seamless-m4t backbone).
+
+The audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, d_model).  Decoder = causal self-attn
++ cross-attn + FFN.  Both stacks scan over stacked layer params.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.module import stack
+
+
+def _enc_block_spec(cfg):
+    return {
+        "attn_norm": L.norm_spec(cfg.d_model, cfg.norm),
+        "attn": L.attention_spec(cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                                 cfg.resolved_head_dim, cfg.qkv_bias),
+        "mlp_norm": L.norm_spec(cfg.d_model, cfg.norm),
+        "mlp": L.mlp_spec(cfg.d_model, cfg.d_ff, cfg.activation),
+    }
+
+
+def _dec_block_spec(cfg):
+    spec = _enc_block_spec(cfg)
+    spec["cross_norm"] = L.norm_spec(cfg.d_model, cfg.norm)
+    spec["cross"] = L.attention_spec(cfg.d_model, cfg.num_heads,
+                                     cfg.num_kv_heads, cfg.resolved_head_dim,
+                                     cfg.qkv_bias)
+    return spec
+
+
+def encdec_spec(cfg: ModelConfig):
+    return {
+        "embed": L.embed_spec(cfg.padded_vocab, cfg.d_model, cfg.tie_embeddings),
+        "enc_blocks": stack(_enc_block_spec(cfg), cfg.enc_layers),
+        "dec_blocks": stack(_dec_block_spec(cfg), cfg.dec_layers),
+        "enc_norm": L.norm_spec(cfg.d_model, cfg.norm),
+        "final_norm": L.norm_spec(cfg.d_model, cfg.norm),
+    }
+
+
+def mask_schema(cfg: ModelConfig) -> Dict[str, tuple]:
+    return {
+        "enc_heads": (cfg.enc_layers, cfg.num_heads),
+        "enc_mlp": (cfg.enc_layers, cfg.d_ff),
+        "heads": (cfg.dec_layers, cfg.num_heads),
+        "cross_heads": (cfg.dec_layers, cfg.num_heads),
+        "mlp": (cfg.dec_layers, cfg.d_ff),
+    }
+
+
+def _cross_attend(p, h, enc_out, head_mask=None, cross_kv=None):
+    """Cross attention: q from decoder h, k/v from encoder output."""
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    if cross_kv is None:
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+    else:
+        k, v = cross_kv["k"], cross_kv["v"]
+    if head_mask is not None:
+        q = q * head_mask.astype(q.dtype)[None, None, :, None]
+    out = L.attend(q, k, v, causal=False, impl="auto")
+    return jnp.einsum("bqhk,hkd->bqd", out, p["wo"]), {"k": k, "v": v}
+
+
+def _encode(params, enc_embeds, cfg, rt, masks=None):
+    x = enc_embeds
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(carry, inp):
+        p, m = inp["p"], inp.get("m", {})
+        h = L.apply_norm(p["attn_norm"], carry, cfg.norm)
+        a = L.attention_fwd(p["attn"], h, positions, causal=False,
+                            theta=cfg.rope_theta, impl=rt["attn_impl"],
+                            head_mask=m.get("enc_heads"))
+        x2 = carry + a
+        h2 = L.apply_norm(p["mlp_norm"], x2, cfg.norm)
+        y = L.mlp_fwd(p["mlp"], h2, cfg.activation, unit_mask=m.get("enc_mlp"))
+        return x2 + y, None
+
+    xs = {"p": params["enc_blocks"]}
+    if masks:
+        sl = {k: masks[k] for k in ("enc_heads", "enc_mlp") if k in masks}
+        if sl:
+            xs["m"] = sl
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, xs)
+    return L.apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+def _dec_xs(params, masks):
+    xs = {"p": params["dec_blocks"]}
+    if masks:
+        sl = {k: masks[k] for k in ("heads", "cross_heads", "mlp") if k in masks}
+        if sl:
+            xs["m"] = sl
+    return xs
+
+
+def encdec_loss(params, batch, cfg: ModelConfig, rt, masks=None,
+                active_mlp_idx=None):
+    enc_out = _encode(params, batch["enc_embeds"], cfg, rt, masks)
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(carry, inp):
+        p, m = inp["p"], inp.get("m", {})
+        h = L.apply_norm(p["attn_norm"], carry, cfg.norm)
+        a = L.attention_fwd(p["attn"], h, positions, causal=True,
+                            theta=cfg.rope_theta, impl=rt["attn_impl"],
+                            head_mask=m.get("heads"))
+        x2 = carry + a
+        h2 = L.apply_norm(p["cross_norm"], x2, cfg.norm)
+        c, _ = _cross_attend(p["cross"], h2, enc_out, m.get("cross_heads"))
+        x3 = x2 + c
+        h3 = L.apply_norm(p["mlp_norm"], x3, cfg.norm)
+        y = L.mlp_fwd(p["mlp"], h3, cfg.activation, unit_mask=m.get("mlp"))
+        return x3 + y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, _dec_xs(params, masks))
+    h = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.constrain(L.unembed(params["embed"], h),
+                         rt.get("logits_spec"))
+    mask = jnp.ones(tokens.shape, logits.dtype).at[:, -1].set(0.0)
+    return L.cross_entropy_loss(logits[:, :-1], tokens[:, 1:], mask[:, :-1])
+
+
+def encdec_prefill(params, batch, cfg: ModelConfig, rt, masks=None):
+    """Encode + run decoder over the prompt; build self+cross caches."""
+    enc_out = _encode(params, batch["enc_embeds"], cfg, rt, masks)
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(carry, inp):
+        p, m = inp["p"], inp.get("m", {})
+        h = L.apply_norm(p["attn_norm"], carry, cfg.norm)
+        a, self_kv = L.attention_prefill(p["attn"], h, positions,
+                                         theta=cfg.rope_theta,
+                                         impl=rt["attn_impl"],
+                                         head_mask=m.get("heads"))
+        x2 = carry + a
+        h2 = L.apply_norm(p["cross_norm"], x2, cfg.norm)
+        c, cross_kv = _cross_attend(p["cross"], h2, enc_out,
+                                    m.get("cross_heads"))
+        x3 = x2 + c
+        h3 = L.apply_norm(p["mlp_norm"], x3, cfg.norm)
+        y = L.mlp_fwd(p["mlp"], h3, cfg.activation, unit_mask=m.get("mlp"))
+        return x3 + y, {"self": self_kv, "cross": cross_kv}
+
+    x, kv = jax.lax.scan(body, x, _dec_xs(params, masks))
+    h = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], h[:, -1:])
+    return logits[:, 0], {"kv": kv, "pos": jnp.array(s, jnp.int32)}
+
+
+def encdec_decode(params, token, cache, cfg: ModelConfig, rt, masks=None):
+    x = L.embed(params["embed"], token)
+    pos = cache["pos"]
+
+    def body(carry, inp):
+        p, kv, m = inp["p"], inp["kv"], inp.get("m", {})
+        h = L.apply_norm(p["attn_norm"], carry, cfg.norm)
+        a, self_kv = L.attention_decode(p["attn"], h, kv["self"], pos,
+                                        theta=cfg.rope_theta,
+                                        head_mask=m.get("heads"))
+        x2 = carry + a
+        h2 = L.apply_norm(p["cross_norm"], x2, cfg.norm)
+        c, _ = _cross_attend(p["cross"], h2, None, m.get("cross_heads"),
+                             cross_kv=kv["cross"])
+        x3 = x2 + c
+        h3 = L.apply_norm(p["mlp_norm"], x3, cfg.norm)
+        y = L.mlp_fwd(p["mlp"], h3, cfg.activation, unit_mask=m.get("mlp"))
+        return x3 + y, {"self": self_kv, "cross": kv["cross"]}
+
+    xs = _dec_xs(params, masks)
+    xs["kv"] = cache["kv"]
+    x, kv_new = jax.lax.scan(body, x, xs)
+    h = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], h)
+    return logits[:, 0], {"kv": kv_new, "pos": pos + 1}

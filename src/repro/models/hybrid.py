@@ -1,0 +1,140 @@
+"""Hybrid Mamba2 + shared-attention assembly (zamba2).
+
+38 Mamba2 layers; ONE shared transformer block (weights reused) applied every
+``attn_every`` layers — each invocation keeps its own KV cache (activations
+differ even though weights are shared).  Zamba2's per-invocation LoRA on the
+shared block is omitted (noted in DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.module import stack
+
+
+def hybrid_spec(cfg: ModelConfig):
+    return {
+        "embed": L.embed_spec(cfg.padded_vocab, cfg.d_model, True),
+        "mamba_norms": stack(L.norm_spec(cfg.d_model, cfg.norm), cfg.num_layers),
+        "mamba": stack(ssm.mamba2_spec(cfg), cfg.num_layers),
+        "shared_attn": {
+            "attn_norm": L.norm_spec(cfg.d_model, cfg.norm),
+            "attn": L.attention_spec(cfg.d_model, cfg.num_heads,
+                                     cfg.num_kv_heads, cfg.resolved_head_dim,
+                                     cfg.qkv_bias),
+            "mlp_norm": L.norm_spec(cfg.d_model, cfg.norm),
+            "mlp": L.mlp_spec(cfg.d_model, cfg.d_ff, cfg.activation),
+        },
+        "final_norm": L.norm_spec(cfg.d_model, cfg.norm),
+    }
+
+
+def _n_attn(cfg) -> int:
+    return (cfg.num_layers + cfg.attn_every - 1) // cfg.attn_every
+
+
+def mask_schema(cfg: ModelConfig) -> Dict[str, tuple]:
+    nh = cfg.ssm_expand * cfg.d_model // cfg.ssm_head_dim
+    return {
+        "ssm_heads": (cfg.num_layers, nh),
+        "heads": (1, cfg.num_heads),          # shared block
+        "mlp": (1, cfg.d_ff),
+    }
+
+
+def _attn_block(p, x, positions, cfg, rt, masks, cache=None, pos=None):
+    hm = None if masks is None or "heads" not in masks else masks["heads"][0]
+    mm = None if masks is None or "mlp" not in masks else masks["mlp"][0]
+    h = L.apply_norm(p["attn_norm"], x, cfg.norm)
+    if cache is None:
+        a = L.attention_fwd(p["attn"], h, positions, theta=cfg.rope_theta,
+                            impl=rt["attn_impl"], head_mask=hm)
+        kv = None
+    elif pos is None:                          # prefill: build cache
+        a, kv = L.attention_prefill(p["attn"], h, positions,
+                                    theta=cfg.rope_theta, impl=rt["attn_impl"],
+                                    head_mask=hm)
+    else:                                      # decode
+        a, kv = L.attention_decode(p["attn"], h, cache, pos,
+                                   theta=cfg.rope_theta, head_mask=hm)
+    x = x + a
+    h2 = L.apply_norm(p["mlp_norm"], x, cfg.norm)
+    return x + L.mlp_fwd(p["mlp"], h2, cfg.activation, unit_mask=mm), kv
+
+
+def _run(params, x, cfg, rt, masks, mode, cache=None, pos=None):
+    """mode: train | prefill | decode.  Returns (x, new_cache)."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s)) if pos is None \
+        else jnp.full((b, s), pos, jnp.int32)
+    new_ssm, new_kv = [], []
+    ai = 0
+    for i in range(cfg.num_layers):
+        if cfg.attn_every and i % cfg.attn_every == 0:
+            kv_in = None if cache is None else cache["attn"][ai]
+            want_cache = mode != "train"
+            x, kv = _attn_block(params["shared_attn"], x, positions, cfg, rt,
+                                masks,
+                                cache=kv_in if mode == "decode" else (
+                                    {} if want_cache else None),
+                                pos=pos if mode == "decode" else None)
+            if want_cache:
+                new_kv.append(kv)
+            ai += 1
+        p = jax.tree.map(lambda t: t[i], params["mamba"])
+        pn = jax.tree.map(lambda t: t[i], params["mamba_norms"])
+        hm = None if masks is None or "ssm_heads" not in masks else \
+            masks["ssm_heads"][i]
+        h = L.apply_norm(pn, x, cfg.norm)
+        if mode == "decode":
+            y, st = ssm.mamba2_decode(p, h, cache["ssm"][i], cfg, head_mask=hm)
+            new_ssm.append(st)
+        elif mode == "prefill":
+            y, st = ssm.mamba2_fwd(p, h, cfg, head_mask=hm, return_cache=True)
+            new_ssm.append(st)
+        else:
+            y = ssm.mamba2_fwd(p, h, cfg, head_mask=hm)
+        x = x + y
+    if mode == "train":
+        return x, None
+    return x, {"ssm": new_ssm, "attn": new_kv}
+
+
+def hybrid_loss(params, batch, cfg: ModelConfig, rt, masks=None,
+                active_mlp_idx=None):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    x = L.constrain(x, rt.get("act_spec"))
+    x, _ = _run(params, x, cfg, rt, masks, "train")
+    h = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.constrain(L.unembed(params["embed"], h),
+                         rt.get("logits_spec"))
+    mask = jnp.ones(tokens.shape, logits.dtype).at[:, -1].set(0.0)
+    return L.cross_entropy_loss(logits[:, :-1], tokens[:, 1:], mask[:, :-1])
+
+
+def hybrid_prefill(params, batch, cfg: ModelConfig, rt, masks=None):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    x, cache = _run(params, x, cfg, rt, masks, "prefill")
+    h = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], h[:, -1:])
+    cache["pos"] = jnp.array(tokens.shape[1], jnp.int32)
+    return logits[:, 0], cache
+
+
+def hybrid_decode(params, token, cache, cfg: ModelConfig, rt, masks=None):
+    x = L.embed(params["embed"], token)
+    pos = cache["pos"]
+    x, new_cache = _run(params, x, cfg, rt, masks, "decode", cache=cache,
+                        pos=pos)
+    h = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], h)
+    new_cache["pos"] = pos + 1
+    return logits[:, 0], new_cache

@@ -1,0 +1,360 @@
+"""Core transformer layers (pure JAX, functional): norms, RoPE, GQA attention
+(with dense / chunked-online-softmax / cached-decode paths), gated MLP.
+
+Parameter layout keeps head and expert dims EXPLICIT (e.g. wq: (d, H, hd))
+so that (a) the sharding rule engine can map logical axes (``heads``, ``mlp``,
+``experts``) onto mesh axes and (b) Helios soft-training can mask/compact
+whole units generically.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import P
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_spec(d: int, kind: str = "rmsnorm"):
+    if kind == "rmsnorm":
+        return {"scale": P((d,), ("embed",), init="ones")}
+    return {"scale": P((d,), ("embed",), init="ones"),
+            "bias": P((d,), ("embed",), init="zeros")}
+
+
+def apply_norm(params, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10_000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                    # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                    # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA)
+# ---------------------------------------------------------------------------
+
+
+def attention_spec(d: int, n_heads: int, n_kv: int, head_dim: int,
+                   bias: bool = False):
+    spec = {
+        "wq": P((d, n_heads, head_dim), ("embed", "heads", "head_dim")),
+        "wk": P((d, n_kv, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": P((d, n_kv, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": P((n_heads, head_dim, d), ("heads", "head_dim", "embed")),
+    }
+    if bias:
+        spec["bq"] = P((n_heads, head_dim), ("heads", "head_dim"), init="zeros")
+        spec["bk"] = P((n_kv, head_dim), ("kv_heads", "head_dim"), init="zeros")
+        spec["bv"] = P((n_kv, head_dim), ("kv_heads", "head_dim"), init="zeros")
+    return spec
+
+
+def _project_qkv(params, x, positions, theta, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if rope:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, groups, d)).reshape(
+        b, s, h * groups, d)
+
+
+def dense_attention(q, k, v, *, causal: bool, q_offset: int | jax.Array = 0,
+                    kv_len_mask: Optional[jax.Array] = None,
+                    score_spec=None):
+    """Materialized-scores attention. q:(B,Sq,H,hd) k,v:(B,Sk,KV,hd).
+
+    ``score_spec`` pins the (B,H,Sq,Sk) score layout — decode keeps Sk
+    sharded so the softmax reduces over the sharded cache sequence
+    (distributed flash-decoding) instead of gathering K/V.
+    """
+    groups = q.shape[2] // k.shape[2]
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhk,bshk->bhqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = constrain(logits, score_spec)
+    if causal:
+        qpos = jnp.arange(q.shape[1]) + q_offset
+        kpos = jnp.arange(k.shape[1])
+        mask = qpos[:, None] >= kpos[None, :]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    if kv_len_mask is not None:                       # (B, Sk) valid-key mask
+        logits = jnp.where(kv_len_mask[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    probs = constrain(probs, score_spec)
+    return jnp.einsum("bhqs,bshk->bqhk", probs, v)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
+                      kv_chunk: int = 1024):
+    """Online-softmax flash attention in pure JAX (lax.scan over KV chunks).
+
+    O(Sq·hd) memory per query block instead of O(Sq·Sk) scores — this is the
+    lowering used for the 32k prefill dry-run cells (the Pallas kernel in
+    kernels/flash_attention.py is the TPU-native version of this same
+    schedule; its ref.py oracle is dense_attention above).  The named_scope
+    lets the roofline analysis attribute this scope's HBM traffic (the score
+    blocks the Pallas kernel keeps in VMEM) — parallel/hlo_cost.pattern_bytes.
+    """
+    with jax.named_scope("chunked_attention"):
+        return _chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                                  kv_chunk=kv_chunk)
+
+
+def _chunked_attention(q, k, v, *, causal: bool, q_chunk: int,
+                       kv_chunk: int):
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    groups = h // k.shape[2]
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    scale = hd ** -0.5
+    n_q = max(1, sq // q_chunk)
+    q_chunk = sq // n_q
+    n_kv = max(1, sk // kv_chunk)
+    kv_chunk = sk // n_kv
+
+    qr = q.reshape(b, n_q, q_chunk, h, hd)
+    kr = k.reshape(b, n_kv, kv_chunk, h, hd)
+    vr = v.reshape(b, n_kv, kv_chunk, h, hd)
+
+    def per_qchunk(qi, qblk):
+        # qblk: (b, q_chunk, h, hd)
+        def body(carry, inputs):
+            acc, m, denom = carry
+            ki, kblk, vblk = inputs
+            # f32 accumulation WITHOUT materializing f32 copies of K/V
+            logits = jnp.einsum("bqhk,bshk->bhqs", qblk, kblk,
+                                preferred_element_type=jnp.float32) * scale
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+                mask = qpos[:, None] >= kpos[None, :]
+                logits = jnp.where(mask[None, None], logits, -1e30)
+            blk_max = jnp.max(logits, axis=-1)                    # (b,h,q)
+            new_m = jnp.maximum(m, blk_max)
+            correction = jnp.exp(m - new_m)
+            p = jnp.exp(logits - new_m[..., None])                # (b,h,q,s)
+            denom = denom * correction + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqs,bshk->bqhk", p.astype(vblk.dtype), vblk)
+            acc = acc * correction.transpose(0, 2, 1)[..., None] + pv
+            return (acc, new_m, denom), None
+
+        acc0 = jnp.zeros((b, q_chunk, h, hd), jnp.float32)
+        m0 = jnp.full((b, h, q_chunk), -1e30, jnp.float32)
+        d0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        ks = jnp.arange(n_kv)
+        (acc, m, denom), _ = jax.lax.scan(
+            body, (acc0, m0, d0),
+            (ks, jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0)))
+        out = acc / jnp.maximum(denom, 1e-30).transpose(0, 2, 1)[..., None]
+        return out.astype(q.dtype)
+
+    outs = jax.lax.map(lambda args: per_qchunk(args[0], args[1]),
+                       (jnp.arange(n_q), jnp.moveaxis(qr, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, hd)
+
+
+def attend(q, k, v, *, causal: bool, impl: str = "auto",
+           kv_len_mask: Optional[jax.Array] = None, q_offset=0):
+    """Dispatch: dense for short, chunked for long sequences."""
+    if impl == "auto":
+        impl = "chunked" if (q.shape[1] >= 4096 and q.shape[1] == k.shape[1]
+                             and kv_len_mask is None) else "dense"
+    if impl == "chunked":
+        return chunked_attention(q, k, v, causal=causal)
+    return dense_attention(q, k, v, causal=causal, q_offset=q_offset,
+                           kv_len_mask=kv_len_mask)
+
+
+def attention_fwd(params, x, positions, *, causal=True, theta=10_000.0,
+                  impl="auto", rope=True, head_mask: Optional[jax.Array] = None,
+                  kv_spec=None):
+    """Full self-attention over x: (B, S, d)."""
+    q, k, v = _project_qkv(params, x, positions, theta, rope=rope)
+    if head_mask is not None:                     # Helios: mask whole Q heads
+        q = q * head_mask.astype(q.dtype)[None, None, :, None]
+    # pin K/V layout BEFORE the chunked loop so GSPMD gathers them once per
+    # layer instead of once per query chunk (EXPERIMENTS.md §Perf, cell A)
+    k, v = constrain(k, kv_spec), constrain(v, kv_spec)
+    out = attend(q, k, v, causal=causal, impl=impl)
+    return jnp.einsum("bqhk,hkd->bqd", out, params["wo"])
+
+
+def attention_prefill(params, x, positions, *, theta=10_000.0, impl="auto",
+                      rope=True, head_mask=None, kv_spec=None):
+    """Self-attention that also returns the KV cache (pre-RoPE-applied K)."""
+    q, k, v = _project_qkv(params, x, positions, theta, rope=rope)
+    if head_mask is not None:
+        q = q * head_mask.astype(q.dtype)[None, None, :, None]
+    k, v = constrain(k, kv_spec), constrain(v, kv_spec)
+    out = attend(q, k, v, causal=True, impl=impl)
+    return jnp.einsum("bqhk,hkd->bqd", out, params["wo"]), {"k": k, "v": v}
+
+
+def attention_decode(params, x, cache, pos, *, theta=10_000.0, rope=True,
+                     head_mask=None, kv_spec=None):
+    """One-token decode: x (B, 1, d); cache {"k","v"}: (B, S_max, KV, hd).
+
+    The new token is written at position ``pos`` (scalar int32) and attention
+    runs over positions <= pos.  ``kv_spec`` pins the updated cache to its
+    sharded layout (seq over "model" for small-GQA archs) so the attention
+    reduces over the SHARDED sequence dim — distributed flash-decoding —
+    instead of all-gathering the cache every step (EXPERIMENTS.md §Perf B).
+    """
+    positions = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, positions, theta, rope=rope)
+    if head_mask is not None:
+        q = q * head_mask.astype(q.dtype)[None, None, :, None]
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(
+        cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(
+        cache["v"].dtype), pos, axis=1)
+    k, v = constrain(k, kv_spec), constrain(v, kv_spec)
+    score_spec = None
+    if kv_spec is not None and len(kv_spec) >= 2 and kv_spec[1] is not None:
+        # scores (B,H,1,S): keep S on the cache's mesh axis
+        from jax.sharding import PartitionSpec as _P
+        score_spec = _P(kv_spec[0], None, None, kv_spec[1])
+    valid = (jnp.arange(k.shape[1]) <= pos)[None, :]
+    valid = jnp.broadcast_to(valid, (x.shape[0], k.shape[1]))
+    out = dense_attention(q, k, v, causal=False, kv_len_mask=valid,
+                          score_spec=score_spec)
+    return jnp.einsum("bqhk,hkd->bqd", out, params["wo"]), {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU) with optional Helios compaction
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(d: int, ff: int, activation: str = "silu"):
+    if activation == "silu":
+        return {
+            "wi": P((d, ff), ("embed", "mlp")),
+            "wg": P((d, ff), ("embed", "mlp")),
+            "wo": P((ff, d), ("mlp", "embed")),
+        }
+    return {
+        "wi": P((d, ff), ("embed", "mlp")),
+        "wo": P((ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp_fwd(params, x, activation: str = "silu",
+            unit_mask: Optional[jax.Array] = None,
+            active_idx: Optional[jax.Array] = None):
+    """Gated MLP.
+
+    Helios hooks:
+      * ``unit_mask`` (masked mode): float 0/1 over d_ff — paper-faithful
+        semantics, no FLOP savings on dense hardware.
+      * ``active_idx`` (compact mode): int32 (k,) of active hidden units —
+        weights are GATHERED to (d, k) so the compiled matmuls shrink by
+        k/d_ff.  TPU-native soft-training (DESIGN.md §2).
+    """
+    wi, wo = params["wi"], params["wo"]
+    wg = params.get("wg")
+    if active_idx is not None:
+        wi = jnp.take(wi, active_idx, axis=1)
+        wo = jnp.take(wo, active_idx, axis=0)
+        if wg is not None:
+            wg = jnp.take(wg, active_idx, axis=1)
+    h = x @ wi
+    if activation == "silu":
+        h = jax.nn.silu(x @ wg) * h
+    else:
+        h = jax.nn.gelu(h)
+    if unit_mask is not None and active_idx is None:
+        h = h * unit_mask.astype(h.dtype)[None, None, :]
+    return h @ wo
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_spec(vocab: int, d: int, tie: bool):
+    spec = {"embedding": P((vocab, d), ("vocab", "embed"), init="embed",
+                           scale=0.02)}
+    if not tie:
+        spec["unembed"] = P((d, vocab), ("embed", "vocab"), init="embed",
+                            scale=0.02)
+    return spec
+
+
+def embed(params, tokens):
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed(params, x):
+    if "unembed" in params:
+        return x @ params["unembed"]
+    return x @ params["embedding"].T
+
+
+def constrain(x, spec):
+    """with_sharding_constraint when a PartitionSpec is provided (the launch
+    layer threads specs through rt; tests/smoke paths pass None)."""
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def cross_entropy_loss(logits, targets, mask=None):
+    """Mean next-token CE.  logits: (B,S,V); targets: (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

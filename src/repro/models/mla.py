@@ -1,0 +1,108 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Prefill/train use the non-absorbed form (materialize per-head K/V from the
+latent) with chunked attention; decode uses the ABSORBED form: scores are
+computed directly against the cached latent ``c_kv`` (B,S,kv_rank) and the
+shared RoPE key (B,S,rope_dim), so the KV cache is rank+rope_dim wide instead
+of 2*H*hd — the whole point of MLA for 32k/500k caches.
+
+The latent bottleneck is shared across heads and is therefore NOT a Helios
+maskable unit; ``heads`` is (head_mask hook below).  See DESIGN.md §4.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import P
+from repro.models.layers import apply_norm, apply_rope, attend, dense_attention, norm_spec
+
+
+def mla_spec(cfg):
+    d = cfg.d_model
+    h = cfg.num_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "wq_a": P((d, qr), ("embed", "q_lora")),
+        "q_norm": norm_spec(qr, "rmsnorm"),
+        "wq_b": P((qr, h, nope + rope), ("q_lora", "heads", "head_dim")),
+        "wkv_a": P((d, kr + rope), ("embed", "kv_lora")),
+        "kv_norm": norm_spec(kr, "rmsnorm"),
+        "wk_b": P((kr, h, nope), ("kv_lora", "heads", "head_dim")),
+        "wv_b": P((kr, h, vd), ("kv_lora", "heads", "head_dim")),
+        "wo": P((h, vd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _latent(params, x, positions, cfg):
+    """Shared latent pipeline: returns (q, c_kv, k_rope)."""
+    kr, rope = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    nope = cfg.qk_nope_head_dim
+    q_lat = apply_norm(params["q_norm"], x @ params["wq_a"])
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["wq_b"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ params["wkv_a"]
+    c_kv = apply_norm(params["kv_norm"], kv[..., :kr])
+    k_rope = kv[..., kr:][:, :, None, :]                     # (B,S,1,rope)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_fwd(params, x, positions, cfg, *, impl="auto",
+            head_mask: Optional[jax.Array] = None, return_cache=False):
+    """Train/prefill path (non-absorbed)."""
+    nope, vd = cfg.qk_nope_head_dim, cfg.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _latent(params, x, positions, cfg)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wk_b"])
+    v = jnp.einsum("bsr,rhv->bshv", c_kv, params["wv_b"])
+    h = cfg.num_heads
+    k_rope_b = jnp.broadcast_to(k_rope, k_rope.shape[:2] + (h, k_rope.shape[-1]))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    if head_mask is not None:
+        q = q * head_mask.astype(q.dtype)[None, None, :, None]
+    # pad v so attend() can run one fused pass; slice the value dims back out
+    if v.shape[-1] != q.shape[-1]:
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, q.shape[-1] - v.shape[-1])))
+    out = attend(q, k, v, causal=True, impl=impl)[..., :vd]
+    y = jnp.einsum("bqhv,hvd->bqd", out, params["wo"])
+    if return_cache:
+        return y, {"c_kv": c_kv, "k_rope": k_rope[:, :, 0, :]}
+    return y
+
+
+def mla_decode(params, x, cache, pos, cfg, head_mask=None):
+    """Absorbed one-token decode against the latent cache.
+
+    cache: {"c_kv": (B,S,kv_rank), "k_rope": (B,S,rope_dim)}.
+    """
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    positions = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+    q_nope, q_rope, c_new, kr_new = _latent(params, x, positions, cfg)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new[:, :, 0, :].astype(cache["k_rope"].dtype),
+        pos, axis=1)
+
+    # absorb W_uk into the query: score_nope = (q_nope @ W_uk^T) . c_kv
+    q_eff = jnp.einsum("bqhk,rhk->bqhr", q_nope, params["wk_b"])
+    if head_mask is not None:
+        q_eff = q_eff * head_mask.astype(q_eff.dtype)[None, None, :, None]
+        q_rope = q_rope * head_mask.astype(q_rope.dtype)[None, None, :, None]
+    scale = (nope + rope) ** -0.5
+    logits = (jnp.einsum("bqhr,bsr->bhqs", q_eff, c_kv)
+              + jnp.einsum("bqhk,bsk->bhqs", q_rope, k_rope)).astype(
+                  jnp.float32) * scale
+    valid = (jnp.arange(c_kv.shape[1]) <= pos)[None, None, None, :]
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", probs, c_kv)        # attend in latent
+    out = jnp.einsum("bqhr,rhv->bqhv", o_lat, params["wv_b"])
+    y = jnp.einsum("bqhv,hvd->bqd", out, params["wo"])
+    return y, {"c_kv": c_kv, "k_rope": k_rope}

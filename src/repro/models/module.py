@@ -1,0 +1,123 @@
+"""Minimal functional module system: parameter *specs* as single source of truth.
+
+A model is described by a nested dict of :class:`P` leaves.  From that one
+spec we derive:
+
+* ``init_params``     — concrete arrays (CPU training, smoke tests)
+* ``abstract_params`` — ``jax.ShapeDtypeStruct`` tree (dry-run: no allocation)
+* ``logical_axes``    — tree of logical-axis-name tuples, consumed by both the
+  sharding rule engine (parallel/sharding.py) and Helios masking/contribution
+  (core/masking.py) — masks act on the ``mlp`` / ``heads`` / ``experts`` /
+  ``ssm_heads`` / ``filters`` axes.
+
+``stack(spec, n)`` prepends a ``layers`` axis to every leaf for
+scan-over-layers assembly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """One parameter leaf: shape + logical axes + initializer."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: Optional[float] = None  # stddev override (normal/embed)
+    dtype: Any = None              # dtype override
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec_leaf(x) -> bool:
+    return isinstance(x, P)
+
+
+def _map_spec(fn, spec, path=()):
+    if isinstance(spec, dict):
+        return {k: _map_spec(fn, v, path + (k,)) for k, v in spec.items()}
+    return fn(path, spec)
+
+
+def _fan_in(p: P) -> int:
+    """Fan-in heuristic: product of all dims except the last."""
+    if len(p.shape) <= 1:
+        return max(1, p.shape[0] if p.shape else 1)
+    n = 1
+    for s in p.shape[:-1]:
+        n *= s
+    return max(1, n)
+
+
+def _path_key(root: jax.Array, path: Tuple[str, ...]) -> jax.Array:
+    """Deterministic per-leaf key derived from the path string."""
+    h = np.uint32(2166136261)
+    for part in "/".join(path).encode():
+        h = np.uint32((int(h) ^ part) * 16777619 & 0xFFFFFFFF)
+    return jax.random.fold_in(root, int(h))
+
+
+def init_params(key: jax.Array, spec, dtype=jnp.float32):
+    def make(path, p: P):
+        dt = p.dtype or dtype
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dt)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dt)
+        k = _path_key(key, path)
+        if p.init == "embed":
+            scale = p.scale if p.scale is not None else 1.0
+            return (jax.random.normal(k, p.shape) * scale).astype(dt)
+        scale = p.scale if p.scale is not None else 1.0 / np.sqrt(_fan_in(p))
+        return (jax.random.normal(k, p.shape) * scale).astype(dt)
+
+    return _map_spec(make, spec)
+
+
+def abstract_params(spec, dtype=jnp.float32):
+    return _map_spec(
+        lambda _, p: jax.ShapeDtypeStruct(p.shape, p.dtype or dtype), spec)
+
+
+def logical_axes(spec):
+    return _map_spec(lambda _, p: p.axes, spec)
+
+
+def stack(spec, n: int, axis_name: str = "layers"):
+    """Stack a per-layer spec n times (scan-over-layers parameter layout)."""
+    return _map_spec(
+        lambda _, p: dataclasses.replace(
+            p, shape=(n,) + p.shape, axes=(axis_name,) + p.axes), spec)
+
+
+def param_count(spec) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(spec, is_leaf=is_spec_leaf):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+    return total
+
+
+def tree_paths(tree, is_leaf=None):
+    """List of ('a/b/c', leaf) pairs in deterministic order."""
+    out = []
+
+    def rec(node, path):
+        if isinstance(node, dict) and (is_leaf is None or not is_leaf(node)):
+            for k in sorted(node):
+                rec(node[k], path + (k,))
+        else:
+            out.append(("/".join(path), node))
+
+    rec(tree, ())
+    return out

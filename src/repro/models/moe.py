@@ -1,0 +1,136 @@
+"""Mixture-of-Experts with capacity-based grouped dispatch.
+
+Two execution paths:
+
+* ``grouped`` (default): tokens are sorted by routed expert id into E groups
+  of static capacity C (overflow dropped, standard TPU practice).  Compiled
+  FLOPs are proportional to ACTIVE params (top-k), which is what the roofline
+  MODEL_FLOPS/HLO_FLOPs ratio checks.  Dispatch is vmapped over ``moe_groups``
+  token groups so the sort/scatter stays LOCAL to a data-parallel shard group
+  and GSPMD only inserts the expert-parallel collectives (DESIGN.md §5).
+* ``dense``: every expert sees every token, masked combine.  Exact reference —
+  used as the oracle in tests and for tiny smoke configs.
+
+Helios hook: ``expert_mask`` (float 0/1 over E) zeroes router probabilities of
+inactive experts before top-k — expert-level soft-training (rotating which
+experts train), the natural unit for granite/deepseek-v2 (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import P
+from repro.models.layers import mlp_fwd, mlp_spec
+
+
+def moe_spec(cfg):
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    spec = {
+        "router": P((d, e), ("embed", "experts"), scale=0.02),
+        "wi": P((e, d, ff), ("experts", "embed", "mlp")),
+        "wg": P((e, d, ff), ("experts", "embed", "mlp")),
+        "wo": P((e, ff, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.num_shared_experts:
+        spec["shared"] = mlp_spec(d, ff * cfg.num_shared_experts, "silu")
+    return spec
+
+
+def _route(params, x2d, cfg, expert_mask):
+    """Router: returns (weights, idx) of shape (T, k)."""
+    logits = x2d @ params["router"]                          # (T, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    if expert_mask is not None:
+        probs = probs * expert_mask[None, :]
+    w, idx = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    return w.astype(x2d.dtype), idx
+
+
+def _grouped_ffn(params, x2d, w, idx, cfg, capacity_factor):
+    """Sort-by-expert grouped dispatch on one token group. x2d: (T, d)."""
+    t, d = x2d.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    cap = int(math.ceil(t * k / e * capacity_factor))
+    cap = max(8, ((cap + 7) // 8) * 8)
+
+    flat_e = idx.reshape(-1)                                 # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_w = w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+
+    counts = jax.ops.segment_sum(jnp.ones_like(se), se, num_segments=e)
+    start = jnp.cumsum(counts) - counts                      # exclusive
+    pos = jnp.arange(t * k) - start[se]
+    slot = jnp.where(pos < cap, se * cap + pos, e * cap)     # overflow -> sink
+
+    xs = x2d[st]                                             # (T*k, d)
+    buf = jnp.zeros((e * cap + 1, d), x2d.dtype).at[slot].set(xs)
+    h = buf[: e * cap].reshape(e, cap, d)
+
+    act = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, params["wg"]))
+    hid = act * jnp.einsum("ecd,edf->ecf", h, params["wi"])
+    y = jnp.einsum("ecf,efd->ecd", hid, params["wo"]).reshape(e * cap, d)
+
+    y_pad = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)], axis=0)
+    contrib = y_pad[slot] * sw[:, None]
+    return jax.ops.segment_sum(contrib, st, num_segments=t)
+
+
+def _dense_ffn(params, x2d, w, idx, cfg):
+    """Reference: all experts on all tokens, mask-combined. (T, d)."""
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    act = jax.nn.silu(jnp.einsum("td,edf->tef", x2d, params["wg"]))
+    hid = act * jnp.einsum("td,edf->tef", x2d, params["wi"])
+    y = jnp.einsum("tef,efd->ted", hid, params["wo"])        # (T, E, d)
+    comb = jnp.zeros((x2d.shape[0], e), x2d.dtype)
+    for j in range(k):                                       # k is tiny/static
+        comb = comb + jax.nn.one_hot(idx[:, j], e, dtype=x2d.dtype) * w[:, j:j + 1]
+    return jnp.einsum("ted,te->td", y, comb)
+
+
+def moe_fwd(params, x, cfg, *,
+            expert_mask: Optional[jax.Array] = None,
+            mlp_mask: Optional[jax.Array] = None,
+            impl: str = "grouped",
+            moe_groups: int = 1,
+            capacity_factor: float = 1.25):
+    """x: (B, S, d) -> (B, S, d).  ``moe_groups`` must divide B*S."""
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    w, idx = _route(params, x2d, cfg, expert_mask)
+
+    if impl == "dense":
+        y = _dense_ffn(params, x2d, w, idx, cfg)
+    else:
+        g = moe_groups
+        assert (b * s) % g == 0, (b, s, g)
+        xg = x2d.reshape(g, (b * s) // g, d)
+        wg_ = w.reshape(g, (b * s) // g, -1)
+        ig = idx.reshape(g, (b * s) // g, -1)
+        y = jax.vmap(lambda xx, ww, ii: _grouped_ffn(
+            params, xx, ww, ii, cfg, capacity_factor))(xg, wg_, ig)
+        y = y.reshape(b * s, d)
+
+    y = y.reshape(b, s, d)
+    if cfg.num_shared_experts:
+        y = y + mlp_fwd(params["shared"], x, "silu", unit_mask=None)
+    return y
+
+
+def load_balance_loss(params, x, cfg):
+    """Auxiliary load-balancing loss (Switch-style): E * sum(f_e * p_e)."""
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    logits = x2d @ params["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    _, idx = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    onehot = jax.nn.one_hot(idx, cfg.num_experts).sum(axis=1)  # (T, E)
+    f = onehot.mean(axis=0) / cfg.num_experts_per_tok
+    p = probs.mean(axis=0)
+    return cfg.num_experts * jnp.sum(f * p)

@@ -1,0 +1,170 @@
+"""Mamba2 (SSD) block in chunked, MXU-friendly matmul form.
+
+Training/prefill use the chunked SSD algorithm (intra-chunk attention-like
+matmuls + inter-chunk state scan) — O(S·L) compute with chunk length L, all
+matmuls, which is the TPU-native expression of the selective scan (see
+kernels/ssd_scan.py for the Pallas version of the intra-chunk block).
+Decode is the O(1) recurrent step against the (heads, head_dim, state) cache.
+
+Helios unit: ``ssm_heads`` — state dims within a head are coupled, heads are
+independent (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import P
+
+D_CONV = 4  # depthwise causal conv kernel width
+
+
+def mamba2_spec(cfg):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    nh = d_in // cfg.ssm_head_dim
+    hd = cfg.ssm_head_dim
+    ds = cfg.ssm_state
+    return {
+        "wx": P((d, nh, hd), ("embed", "ssm_heads", "head_dim")),
+        "wz": P((d, nh, hd), ("embed", "ssm_heads", "head_dim")),
+        "wB": P((d, ds), ("embed", "ssm_state")),
+        "wC": P((d, ds), ("embed", "ssm_state")),
+        "wdt": P((d, nh), ("embed", "ssm_heads")),
+        "dt_bias": P((nh,), ("ssm_heads",), init="zeros"),
+        "A_log": P((nh,), ("ssm_heads",), init="zeros"),
+        "D": P((nh,), ("ssm_heads",), init="ones"),
+        "conv": P((D_CONV, nh, hd), ("conv_k", "ssm_heads", "head_dim"),
+                  scale=0.5),
+        "wo": P((nh, hd, d), ("ssm_heads", "head_dim", "embed")),
+    }
+
+
+def _proj(params, x, head_mask):
+    """Shared projections. x: (B,S,d)."""
+    xh = jnp.einsum("bsd,dhk->bshk", x, params["wx"])
+    z = jnp.einsum("bsd,dhk->bshk", x, params["wz"])
+    Bm = x @ params["wB"]                                    # (B,S,ds)
+    Cm = x @ params["wC"]
+    dt = jax.nn.softplus(x @ params["wdt"] + params["dt_bias"])  # (B,S,nh)
+    if head_mask is not None:
+        xh = xh * head_mask.astype(xh.dtype)[None, None, :, None]
+        dt = dt * head_mask.astype(dt.dtype)[None, None, :]
+    return xh, z, Bm, Cm, dt
+
+
+def _causal_conv(xh, kernel):
+    """Depthwise causal conv over time. xh: (B,S,nh,hd); kernel: (K,nh,hd)."""
+    pad = jnp.pad(xh, ((0, 0), (D_CONV - 1, 0), (0, 0), (0, 0)))
+    out = jnp.zeros_like(xh)
+    for i in range(D_CONV):                                  # K=4, unrolled
+        out = out + pad[:, i:i + xh.shape[1]] * kernel[i][None, None]
+    return jax.nn.silu(out)
+
+
+def ssd_chunked(xh, Bm, Cm, dt, A, chunk: int, h0=None):
+    """Chunked SSD. xh:(B,S,nh,hd) Bm,Cm:(B,S,ds) dt:(B,S,nh) A:(nh,)<0.
+
+    Returns (y, h_final) with h_final: (B,nh,hd,ds).
+    """
+    b, s, nh, hd = xh.shape
+    ds = Bm.shape[-1]
+    nc = max(1, s // chunk)
+    L = s // nc
+    f32 = jnp.float32
+
+    xr = xh.reshape(b, nc, L, nh, hd)
+    Br = Bm.reshape(b, nc, L, ds).astype(f32)
+    Cr = Cm.reshape(b, nc, L, ds).astype(f32)
+    dtr = dt.reshape(b, nc, L, nh).astype(f32)
+    a = dtr * A[None, None, None, :]                         # (b,nc,L,nh) <= 0
+    cum = jnp.cumsum(a, axis=2)                              # inclusive
+    dtx = (dtr[..., None] * xr.astype(f32))                  # (b,nc,L,nh,hd)
+
+    # ---- intra-chunk (attention-like, per head) ----
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (b,nc,L,L,nh)
+    tril = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(tril[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bnli,bnmi->bnlm", Cr, Br)               # (b,nc,L,L)
+    y_diag = jnp.einsum("bnlm,bnlmh,bnmhp->bnlhp", cb, decay, dtx)
+
+    # ---- chunk states ----
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)             # (b,nc,L,nh)
+    states = jnp.einsum("bnlh,bnlhp,bnli->bnhpi", decay_out, dtx, Br)
+
+    # ---- inter-chunk recurrence over nc (small) ----
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (b,nc,nh)
+
+    def body(h, inp):
+        st, dec = inp
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h
+
+    init = jnp.zeros((b, nh, hd, ds), f32) if h0 is None else h0.astype(f32)
+    h_final, h_starts = jax.lax.scan(
+        body, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_starts = jnp.moveaxis(h_starts, 0, 1)                  # (b,nc,nh,hd,ds)
+
+    # ---- inter contribution ----
+    y_off = jnp.einsum("bnli,bnhpi,bnlh->bnlhp", Cr, h_starts, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(b, s, nh, hd).astype(xh.dtype)
+    return y, h_final.astype(xh.dtype)
+
+
+def ssd_recurrent_ref(xh, Bm, Cm, dt, A, h0=None):
+    """Step-by-step oracle for tests."""
+    b, s, nh, hd = xh.shape
+    ds = Bm.shape[-1]
+    h = jnp.zeros((b, nh, hd, ds), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, t):
+        a = jnp.exp(dt[:, t].astype(jnp.float32) * A)        # (b,nh)
+        upd = (dt[:, t, :, None, None] * xh[:, t, :, :, None].astype(jnp.float32)
+               * Bm[:, t, None, None, :].astype(jnp.float32))
+        h = h * a[:, :, None, None] + upd
+        y = jnp.einsum("bhpi,bi->bhp", h, Cm[:, t].astype(jnp.float32))
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype), h.astype(xh.dtype)
+
+
+def mamba2_fwd(params, x, cfg, *, head_mask: Optional[jax.Array] = None,
+               return_cache: bool = False, impl: str = "chunked"):
+    """Full block: (B,S,d) -> (B,S,d)."""
+    xh_raw, z, Bm, Cm, dt = _proj(params, x, head_mask)
+    xh = _causal_conv(xh_raw, params["conv"])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    if impl == "recurrent":
+        y, h = ssd_recurrent_ref(xh, Bm, Cm, dt, A)
+    else:
+        y, h = ssd_chunked(xh, Bm, Cm, dt, A, cfg.ssm_chunk)
+    y = y + params["D"][None, None, :, None] * xh
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bshk,hkd->bsd", y, params["wo"])
+    if return_cache:
+        # cache the last K-1 RAW (pre-conv) inputs; decode re-applies the kernel
+        conv_state = jnp.pad(
+            xh_raw, ((0, 0), (D_CONV - 1, 0), (0, 0), (0, 0)))[:, -(D_CONV - 1):]
+        return out, {"h": h, "conv": conv_state}
+    return out
+
+
+def mamba2_decode(params, x, cache, cfg, head_mask=None):
+    """One-token step. x: (B,1,d); cache {"h": (B,nh,hd,ds), "conv": (B,K-1,nh,hd)}."""
+    xh, z, Bm, Cm, dt = _proj(params, x, head_mask)          # (B,1,...)
+    window = jnp.concatenate([cache["conv"], xh], axis=1)    # (B,K,nh,hd)
+    conv_out = jnp.einsum("bkhd,khd->bhd", window, params["conv"])[:, None]
+    xh_c = jax.nn.silu(conv_out)                             # (B,1,nh,hd)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0].astype(jnp.float32) * A)            # (B,nh)
+    upd = (dt[:, 0, :, None, None] * xh_c[:, 0, :, :, None].astype(jnp.float32)
+           * Bm[:, 0, None, None, :].astype(jnp.float32))
+    h = cache["h"].astype(jnp.float32) * a[:, :, None, None] + upd
+    y = jnp.einsum("bhpi,bi->bhp", h, Cm[:, 0].astype(jnp.float32))[:, None]
+    y = y.astype(x.dtype) + params["D"][None, None, :, None] * xh_c
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bshk,hkd->bsd", y, params["wo"])
+    return out, {"h": h.astype(cache["h"].dtype), "conv": window[:, 1:]}

@@ -1,0 +1,357 @@
+"""Decoder-only LM assembly (families: dense, moe, vlm).
+
+Homogeneous stacks use scan-over-layers with STACKED params (leading
+``layers`` axis) — one traced block, short HLO, fast 512-device GSPMD
+compiles (the MaxText pattern).  DeepSeek-V2's leading dense layer lives
+outside the scanned MoE stack.
+
+Helios masks enter as a dict of stacked unit masks:
+  {"mlp": (L, d_ff), "heads": (L, H), "experts": (L, E)}
+sliced per layer inside the scan; masked-out units are removed from the
+forward pass so their parameters receive zero gradient (soft-training
+semantics).  In ``compact`` mode `active_mlp_idx` (L, k) gathers the MLP
+hidden units instead, shrinking the compiled matmuls (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mla, moe
+from repro.models.module import P, stack
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def _attn_spec(cfg: ModelConfig):
+    if cfg.use_mla:
+        return mla.mla_spec(cfg)
+    return L.attention_spec(cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                            cfg.resolved_head_dim, cfg.qkv_bias)
+
+
+def _block_spec(cfg: ModelConfig, kind: str):
+    spec = {
+        "attn_norm": L.norm_spec(cfg.d_model, cfg.norm),
+        "attn": _attn_spec(cfg),
+        "mlp_norm": L.norm_spec(cfg.d_model, cfg.norm),
+    }
+    if kind == "moe":
+        spec["moe"] = moe.moe_spec(cfg)
+    else:
+        spec["mlp"] = L.mlp_spec(cfg.d_model, cfg.d_ff, cfg.activation)
+    return spec
+
+
+def lm_spec(cfg: ModelConfig):
+    spec: Dict[str, Any] = {"embed": L.embed_spec(cfg.padded_vocab,
+                                                  cfg.d_model,
+                                                  cfg.tie_embeddings)}
+    n_dense = cfg.first_k_dense if cfg.family == "moe" else 0
+    n_moe = cfg.num_layers - n_dense if cfg.family == "moe" else 0
+    n_plain = cfg.num_layers if cfg.family != "moe" else 0
+
+    if n_dense:
+        spec["dense_blocks"] = stack(_block_spec(cfg, "dense"), n_dense)
+    if n_moe:
+        spec["moe_blocks"] = stack(_block_spec(cfg, "moe"), n_moe)
+    if n_plain:
+        spec["blocks"] = stack(_block_spec(cfg, "dense"), n_plain)
+    spec["final_norm"] = L.norm_spec(cfg.d_model, cfg.norm)
+    return spec
+
+
+def mask_schema(cfg: ModelConfig) -> Dict[str, tuple]:
+    """Helios maskable-unit table: key -> (num_layers, units).
+
+    Multi-stack models (DeepSeek-V2: dense + MoE stacks) use stack-scoped
+    keys ("moe_blocks:heads") so scores/masks align with each stack.
+    """
+    if cfg.family == "moe":
+        n_moe = cfg.num_layers - cfg.first_k_dense
+        if cfg.first_k_dense:
+            return {"dense_blocks:heads": (cfg.first_k_dense, cfg.num_heads),
+                    "moe_blocks:heads": (n_moe, cfg.num_heads),
+                    "mlp": (cfg.first_k_dense, cfg.d_ff),
+                    "experts": (n_moe, cfg.num_experts)}
+        return {"heads": (cfg.num_layers, cfg.num_heads),
+                "experts": (cfg.num_layers, cfg.num_experts)}
+    return {"heads": (cfg.num_layers, cfg.num_heads),
+            "mlp": (cfg.num_layers, cfg.d_ff)}
+
+
+def _stack_masks(masks, name: str, kind: str, n_layers: int):
+    """Per-stack mask slices with canonical keys (heads / mlp / experts)."""
+    if not masks:
+        return {}
+    sl = {}
+    hk = f"{name}:heads" if f"{name}:heads" in masks else "heads"
+    if hk in masks and masks[hk].shape[0] == n_layers:
+        sl["heads"] = masks[hk]
+    ok = "experts" if kind == "moe" else "mlp"
+    if ok in masks and masks[ok].shape[0] == n_layers:
+        sl[ok] = masks[ok]
+    return sl
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _mask_slice(masks, key, i):
+    if masks is None or key not in masks:
+        return None
+    return masks[key][i]
+
+
+def _block_fwd(p, x, positions, cfg, rt, *, kind: str, head_mask=None,
+               mlp_mask=None, expert_mask=None, active_mlp_idx=None):
+    h = L.apply_norm(p["attn_norm"], x, cfg.norm)
+    if cfg.use_mla:
+        attn_out = mla.mla_fwd(p["attn"], h, positions, cfg,
+                               impl=rt["attn_impl"], head_mask=head_mask)
+    else:
+        attn_out = L.attention_fwd(p["attn"], h, positions, theta=cfg.rope_theta,
+                                   impl=rt["attn_impl"], head_mask=head_mask,
+                                   rope=rt.get("rope", True),
+                                   kv_spec=rt.get("kv_spec"))
+    # named for the remat policy: saving attention outputs avoids
+    # recomputing the S^2 attention in the backward pass (§Perf cell C)
+    attn_out = checkpoint_name(attn_out, "attn_out")
+    x = x + attn_out
+    h = L.apply_norm(p["mlp_norm"], x, cfg.norm)
+    if kind == "moe":
+        y = moe.moe_fwd(p["moe"], h, cfg, expert_mask=expert_mask,
+                        impl=rt["moe_impl"], moe_groups=rt["moe_groups"])
+    else:
+        y = L.mlp_fwd(p["mlp"], h, cfg.activation, unit_mask=mlp_mask,
+                      active_idx=active_mlp_idx)
+    return x + y
+
+
+def _scan_stack(params_stacked, x, positions, cfg, rt, *, kind: str,
+                name: str = "blocks", masks=None, active_mlp_idx=None):
+    """lax.scan over stacked layer params (+ per-layer mask slices)."""
+    n_layers = jax.tree.leaves(params_stacked)[0].shape[0]
+
+    xs = {"p": params_stacked}
+    sl = _stack_masks(masks, name, kind, n_layers)
+    if sl:
+        xs["m"] = sl
+    if active_mlp_idx is not None:
+        xs["idx"] = active_mlp_idx
+
+    def body(carry, inp):
+        m = inp.get("m", {})
+        carry = _block_fwd(
+            inp["p"], carry, positions, cfg, rt, kind=kind,
+            head_mask=m.get("heads"),
+            mlp_mask=m.get("mlp"),
+            expert_mask=m.get("experts"),
+            active_mlp_idx=inp.get("idx"))
+        return carry, None
+
+    if cfg.remat and rt.get("remat", True):
+        policy = None
+        if rt.get("remat_policy") == "save_attn":
+            policy = jax.checkpoint_policies.save_only_these_names("attn_out")
+        body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+    x, _ = jax.lax.scan(body, x, xs)
+    return x
+
+
+def _unrolled_stack(params_stacked, x, positions, cfg, rt, *, kind: str,
+                    name: str = "blocks", masks=None, active_mlp_idx=None):
+    n_layers = jax.tree.leaves(params_stacked)[0].shape[0]
+    sl = _stack_masks(masks, name, kind, n_layers)
+    key = "experts" if kind == "moe" else "mlp"
+    for i in range(n_layers):
+        p = jax.tree.map(lambda t: t[i], params_stacked)
+        x = _block_fwd(
+            p, x, positions, cfg, rt, kind=kind,
+            head_mask=_mask_slice(sl, "heads", i),
+            mlp_mask=_mask_slice(sl, key, i) if key == "mlp" else None,
+            expert_mask=_mask_slice(sl, key, i) if key == "experts" else None,
+            active_mlp_idx=None if active_mlp_idx is None else active_mlp_idx[i])
+    return x
+
+
+def _stacks(params, cfg):
+    """Ordered (name, kind) of layer stacks present."""
+    out = []
+    if "dense_blocks" in params:
+        out.append(("dense_blocks", "dense"))
+    if "moe_blocks" in params:
+        out.append(("moe_blocks", "moe"))
+    if "blocks" in params:
+        out.append(("blocks", "dense"))
+    return out
+
+
+def _backbone(params, x, positions, cfg, rt, masks=None, active_mlp_idx=None):
+    run = _scan_stack if cfg.scan_layers else _unrolled_stack
+    for name, kind in _stacks(params, cfg):
+        x = run(params[name], x, positions, cfg, rt, kind=kind, name=name,
+                masks=masks, active_mlp_idx=active_mlp_idx)
+    return L.apply_norm(params["final_norm"], x, cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# Entry points: train loss / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, batch, cfg):
+    """Token (+ optional image-prefix) embedding.  Returns (x, loss_mask)."""
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    loss_mask = jnp.ones(tokens.shape, x.dtype)
+    if cfg.family == "vlm":
+        img = batch["image_embeds"].astype(x.dtype)          # (B, Nimg, d)
+        x = jnp.concatenate([img, x], axis=1)
+        loss_mask = jnp.concatenate(
+            [jnp.zeros(img.shape[:2], x.dtype), loss_mask], axis=1)
+    return x, loss_mask
+
+
+def lm_loss(params, batch, cfg: ModelConfig, rt, masks=None,
+            active_mlp_idx=None):
+    x, loss_mask = _embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = L.constrain(x, rt.get("act_spec"))
+    h = _backbone(params, x, positions, cfg, rt, masks, active_mlp_idx)
+    logits = L.constrain(L.unembed(params["embed"], h),
+                         rt.get("logits_spec"))
+    # next-token CE over text positions
+    targets = jnp.concatenate(
+        [batch["tokens"], jnp.zeros((b, 1), batch["tokens"].dtype)], axis=1)
+    offset = x.shape[1] - batch["tokens"].shape[1]           # image prefix len
+    tgt = targets[:, 1:]                                     # (B, S_text)
+    pred = logits[:, offset:offset + tgt.shape[1]]
+    mask = loss_mask[:, offset:offset + tgt.shape[1]]
+    mask = mask.at[:, -1].set(0.0)                           # no target for last
+    return L.cross_entropy_loss(pred, tgt, mask)
+
+
+def lm_prefill(params, batch, cfg: ModelConfig, rt, masks=None):
+    """Forward over the prompt; returns (last-position logits, cache)."""
+    x, _ = _embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    caches = []
+
+    # prefill keeps per-layer caches -> scan with stacked cache outputs
+    for name, kind in _stacks(params, cfg):
+        stackp = params[name]
+        n_layers = jax.tree.leaves(stackp)[0].shape[0]
+
+        def body(carry, inp, kind=kind):
+            p = inp["p"]
+            m = inp.get("m", {})
+            h = L.apply_norm(p["attn_norm"], carry, cfg.norm)
+            hm = m.get("heads")
+            if cfg.use_mla:
+                attn_out, kv = mla.mla_fwd(p["attn"], h, positions, cfg,
+                                           impl=rt["attn_impl"], head_mask=hm,
+                                           return_cache=True)
+            else:
+                attn_out, kv = L.attention_prefill(
+                    p["attn"], h, positions, theta=cfg.rope_theta,
+                    impl=rt["attn_impl"], head_mask=hm,
+                    rope=rt.get("rope", True), kv_spec=rt.get("kv_spec"))
+            x2 = carry + attn_out
+            h2 = L.apply_norm(p["mlp_norm"], x2, cfg.norm)
+            if kind == "moe":
+                y = moe.moe_fwd(p["moe"], h2, cfg, expert_mask=m.get("experts"),
+                                impl=rt["moe_impl"], moe_groups=rt["moe_groups"])
+            else:
+                y = L.mlp_fwd(p["mlp"], h2, cfg.activation,
+                              unit_mask=m.get("mlp"))
+            return x2 + y, kv
+
+        xs = {"p": stackp}
+        sl = _stack_masks(masks, name, kind, n_layers)
+        if sl:
+            xs["m"] = sl
+        if cfg.scan_layers:
+            bodyf = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+            x, kv_stack = jax.lax.scan(bodyf, x, xs)
+            caches.append(kv_stack)
+        else:
+            kvs = []
+            for i in range(n_layers):
+                inp = jax.tree.map(lambda t: t[i], xs)
+                x, kv = body(x, inp)
+                kvs.append(kv)
+            caches.append(jax.tree.map(lambda *ts: jnp.stack(ts), *kvs))
+
+    h = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], h[:, -1:])
+    cache = {"kv": caches, "pos": jnp.array(s, jnp.int32)}
+    return logits[:, 0], cache
+
+
+def lm_decode(params, token, cache, cfg: ModelConfig, rt, masks=None):
+    """One decode step.  token: (B, 1) int32.  Returns (logits, new cache)."""
+    x = L.embed(params["embed"], token)
+    pos = cache["pos"]
+    new_caches = []
+    ci = 0
+    for name, kind in _stacks(params, cfg):
+        stackp = params[name]
+        kv_stack = cache["kv"][ci]
+        n_layers = jax.tree.leaves(stackp)[0].shape[0]
+
+        def body(carry, inp, kind=kind):
+            p, kv, m = inp["p"], inp["kv"], inp.get("m", {})
+            h = L.apply_norm(p["attn_norm"], carry, cfg.norm)
+            hm = m.get("heads")
+            if cfg.use_mla:
+                attn_out, kv_new = mla.mla_decode(p["attn"], h, kv, pos, cfg,
+                                                  head_mask=hm)
+            else:
+                attn_out, kv_new = L.attention_decode(
+                    p["attn"], h, kv, pos, theta=cfg.rope_theta, head_mask=hm,
+                    rope=rt.get("rope", True),
+                    kv_spec=rt.get("decode_kv_spec"))
+            x2 = carry + attn_out
+            h2 = L.apply_norm(p["mlp_norm"], x2, cfg.norm)
+            if kind == "moe":
+                y = moe.moe_fwd(p["moe"], h2, cfg, expert_mask=m.get("experts"),
+                                impl=rt["moe_impl"], moe_groups=rt["moe_groups"])
+            else:
+                y = L.mlp_fwd(p["mlp"], h2, cfg.activation,
+                              unit_mask=m.get("mlp"))
+            return x2 + y, kv_new
+
+        xs = {"p": stackp, "kv": kv_stack}
+        sl = _stack_masks(masks, name, kind, n_layers)
+        if sl:
+            xs["m"] = sl
+        if cfg.scan_layers:
+            x, kv_new_stack = jax.lax.scan(body, x, xs)
+            new_caches.append(kv_new_stack)
+        else:
+            kvs = []
+            for i in range(n_layers):
+                inp = jax.tree.map(lambda t: t[i], xs)
+                x, kv = body(x, inp)
+                kvs.append(kv)
+            new_caches.append(jax.tree.map(lambda *ts: jnp.stack(ts), *kvs))
+        ci += 1
+
+    h = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], h)
+    return logits[:, 0], {"kv": new_caches, "pos": pos + 1}

@@ -1,0 +1,395 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, exponential gating)
+and sLSTM (scalar memory, recurrent h-feedback).
+
+mLSTM trains with a STABILIZED CHUNKWISE algorithm (derivation in comments):
+within a chunk all contributions reduce to attention-like matmuls with the
+per-query stabilizer m_i = b_i + max(m0, cummax_j(i_j - b_j)); the b_i terms
+cancel inside the chunk so intra scores are exp(u_j - rm_i)(k_j.q_i).
+A step-by-step recurrent oracle is kept for tests.  sLSTM is inherently
+sequential (h feeds back) -> lax.scan.
+
+Helios unit: ``ssm_heads``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import P
+
+D_CONV = 4
+
+
+def _heads(cfg):
+    d_in = 2 * cfg.d_model
+    nh = cfg.num_heads
+    return nh, d_in // nh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_spec(cfg):
+    d = cfg.d_model
+    nh, hd = _heads(cfg)
+    return {
+        "wx": P((d, nh, hd), ("embed", "ssm_heads", "head_dim")),
+        "wz": P((d, nh, hd), ("embed", "ssm_heads", "head_dim")),
+        "conv": P((D_CONV, nh, hd), ("conv_k", "ssm_heads", "head_dim"), scale=0.5),
+        "wq": P((nh, hd, hd), ("ssm_heads", "head_dim", "hd2")),
+        "wk": P((nh, hd, hd), ("ssm_heads", "head_dim", "hd2")),
+        "wv": P((nh, hd, hd), ("ssm_heads", "head_dim", "hd2")),
+        "wgi": P((nh, hd), ("ssm_heads", "head_dim"), scale=0.01),
+        "bgi": P((nh,), ("ssm_heads",), init="zeros"),
+        "wgf": P((nh, hd), ("ssm_heads", "head_dim"), scale=0.01),
+        "bgf": P((nh,), ("ssm_heads",), init="ones"),
+        "lskip": P((nh, hd), ("ssm_heads", "head_dim"), init="ones"),
+        "wo": P((nh, hd, d), ("ssm_heads", "head_dim", "embed")),
+    }
+
+
+def _mlstm_proj(params, x, head_mask):
+    xi = jnp.einsum("bsd,dhk->bshk", x, params["wx"])
+    z = jnp.einsum("bsd,dhk->bshk", x, params["wz"])
+    if head_mask is not None:
+        xi = xi * head_mask.astype(xi.dtype)[None, None, :, None]
+    pad = jnp.pad(xi, ((0, 0), (D_CONV - 1, 0), (0, 0), (0, 0)))
+    co = jnp.zeros_like(xi)
+    for i in range(D_CONV):
+        co = co + pad[:, i:i + xi.shape[1]] * params["conv"][i][None, None]
+    co = jax.nn.silu(co)
+    q = jnp.einsum("bshk,hkl->bshl", co, params["wq"])
+    k = jnp.einsum("bshk,hkl->bshl", co, params["wk"]) / (co.shape[-1] ** 0.5)
+    v = jnp.einsum("bshk,hkl->bshl", xi, params["wv"])
+    gi = jnp.einsum("bshk,hk->bsh", co, params["wgi"]) + params["bgi"]
+    gf = jnp.einsum("bshk,hk->bsh", co, params["wgf"]) + params["bgf"]
+    return co, z, q, k, v, gi, gf
+
+
+def mlstm_chunkwise(q, k, v, gi, gf, chunk: int, state=None):
+    """q,k,v: (B,S,nh,hd); gi,gf: (B,S,nh).  Returns (h, new_state).
+
+    state = (C: (B,nh,hd,hd) value-major, n: (B,nh,hd), m: (B,nh)); the stored
+    C,n are normalized by exp(m).
+    """
+    b, s, nh, hd = q.shape
+    nc = max(1, s // chunk)
+    L = s // nc
+    f32 = jnp.float32
+
+    def rs(t):
+        return jnp.moveaxis(t.reshape(b, nc, L, *t.shape[2:]), 1, 0)
+
+    qs, ks, vs = rs(q.astype(f32)), rs(k.astype(f32)), rs(v.astype(f32))
+    gis, gfs = rs(gi.astype(f32)), rs(gf.astype(f32))
+
+    if state is None:
+        C0 = jnp.zeros((b, nh, hd, hd), f32)
+        n0 = jnp.zeros((b, nh, hd), f32)
+        m0 = jnp.full((b, nh), -1e30, f32)
+    else:
+        C0, n0, m0 = (state[0].astype(f32), state[1].astype(f32),
+                      state[2].astype(f32))
+
+    tril = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                                       # normalized by e^m
+        qc, kc, vc, gic, gfc = inp                            # (b,L,nh,...)
+        logf = jax.nn.log_sigmoid(gfc)                        # (b,L,nh)
+        bcum = jnp.cumsum(logf, axis=1)                       # inclusive
+        u = gic - bcum                                        # (b,L,nh)
+        rm = jnp.maximum(jax.lax.cummax(u, axis=1), m[:, None, :])  # (b,L,nh)
+
+        s_intra = jnp.exp(u[:, None, :, :] - rm[:, :, None, :])     # (b,Lq,Lk,nh)
+        s_intra = jnp.where(tril[None, :, :, None], s_intra, 0.0)
+        qk = jnp.einsum("blhk,bmhk->blmh", qc, kc)            # (b,Lq,Lk,nh)
+        w_carry = jnp.exp(m[:, None, :] - rm)                 # (b,L,nh)
+
+        num = (jnp.einsum("blmh,blmh,bmhv->blhv", qk, s_intra, vc)
+               + w_carry[..., None] * jnp.einsum("blhk,bhvk->blhv", qc, C))
+        den_dot = (jnp.einsum("blmh,blmh->blh", qk, s_intra)
+                   + w_carry * jnp.einsum("blhk,bhk->blh", qc, n))
+        m_i = bcum + rm
+        den = jnp.maximum(jnp.abs(den_dot), jnp.exp(-m_i))
+        h = num / den[..., None]
+
+        # end-of-chunk state
+        bL = bcum[:, -1:, :]                                  # (b,1,nh)
+        rmL = rm[:, -1, :]                                    # (b,nh)
+        wj = jnp.exp(u - rmL[:, None, :])                     # (b,L,nh)
+        C_new = (jnp.exp(m - rmL)[:, :, None, None] * C
+                 + jnp.einsum("blh,blhv,blhk->bhvk", wj, vc, kc))
+        n_new = (jnp.exp(m - rmL)[:, :, None] * n
+                 + jnp.einsum("blh,blhk->bhk", wj, kc))
+        m_new = bL[:, 0, :] + rmL
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                 (qs, ks, vs, gis, gfs))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, nh, hd).astype(q.dtype)
+    return h, (C.astype(q.dtype), n.astype(q.dtype), m.astype(f32))
+
+
+def mlstm_recurrent_ref(q, k, v, gi, gf, state=None):
+    """Step-by-step oracle (stabilized recurrence from the paper)."""
+    b, s, nh, hd = q.shape
+    f32 = jnp.float32
+    if state is None:
+        C = jnp.zeros((b, nh, hd, hd), f32)
+        n = jnp.zeros((b, nh, hd), f32)
+        m = jnp.full((b, nh), -1e30, f32)
+    else:
+        C, n, m = [t.astype(f32) for t in state]
+
+    def step(carry, t):
+        C, n, m = carry
+        logf = jax.nn.log_sigmoid(gf[:, t].astype(f32))
+        m_new = jnp.maximum(logf + m, gi[:, t].astype(f32))
+        fp = jnp.exp(logf + m - m_new)
+        ip = jnp.exp(gi[:, t].astype(f32) - m_new)
+        C = fp[:, :, None, None] * C + ip[:, :, None, None] * jnp.einsum(
+            "bhv,bhk->bhvk", v[:, t].astype(f32), k[:, t].astype(f32))
+        n = fp[:, :, None] * n + ip[:, :, None] * k[:, t].astype(f32)
+        num = jnp.einsum("bhvk,bhk->bhv", C, q[:, t].astype(f32))
+        dd = jnp.einsum("bhk,bhk->bh", n, q[:, t].astype(f32))
+        den = jnp.maximum(jnp.abs(dd), jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    (C, n, m), hs = jax.lax.scan(step, (C, n, m), jnp.arange(s))
+    return (jnp.moveaxis(hs, 0, 1).astype(q.dtype),
+            (C.astype(q.dtype), n.astype(q.dtype), m))
+
+
+def mlstm_fwd(params, x, cfg, *, head_mask=None, return_cache=False,
+              state=None, chunk: int = 64):
+    co, z, q, k, v, gi, gf = _mlstm_proj(params, x, head_mask)
+    h, new_state = mlstm_chunkwise(q, k, v, gi, gf, chunk, state)
+    h = h + params["lskip"][None, None] * co
+    y = h * jax.nn.silu(z)
+    out = jnp.einsum("bshk,hkd->bsd", y, params["wo"])
+    # conv window cache for decode (last K-1 raw xi)
+    if return_cache:
+        xi = jnp.einsum("bsd,dhk->bshk", x, params["wx"])
+        if head_mask is not None:
+            xi = xi * head_mask.astype(xi.dtype)[None, None, :, None]
+        conv_cache = jnp.pad(xi, ((0, 0), (D_CONV - 1, 0), (0, 0), (0, 0)))[
+            :, -(D_CONV - 1):]
+        return out, {"C": new_state[0], "n": new_state[1], "m": new_state[2],
+                     "conv": conv_cache}
+    return out
+
+
+def mlstm_decode(params, x, cache, cfg, head_mask=None):
+    """One-token step re-using the recurrent form."""
+    xi = jnp.einsum("bsd,dhk->bshk", x, params["wx"])
+    z = jnp.einsum("bsd,dhk->bshk", x, params["wz"])
+    if head_mask is not None:
+        xi = xi * head_mask.astype(xi.dtype)[None, None, :, None]
+    window = jnp.concatenate([cache["conv"], xi], axis=1)    # (B,K,nh,hd)
+    co = jax.nn.silu(jnp.einsum("bkhd,khd->bhd", window, params["conv"]))[:, None]
+    q = jnp.einsum("bshk,hkl->bshl", co, params["wq"])
+    k = jnp.einsum("bshk,hkl->bshl", co, params["wk"]) / (co.shape[-1] ** 0.5)
+    v = jnp.einsum("bshk,hkl->bshl", xi, params["wv"])
+    gi = jnp.einsum("bshk,hk->bsh", co, params["wgi"]) + params["bgi"]
+    gf = jnp.einsum("bshk,hk->bsh", co, params["wgf"]) + params["bgf"]
+    h, (C, n, m) = mlstm_recurrent_ref(q, k, v, gi, gf,
+                                       (cache["C"], cache["n"], cache["m"]))
+    h = h + params["lskip"][None, None] * co
+    y = h * jax.nn.silu(z)
+    out = jnp.einsum("bshk,hkd->bsd", y, params["wo"])
+    return out, {"C": C, "n": n, "m": m, "conv": window[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_spec(cfg):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hd = d // nh
+    gates = {}
+    for g in ("z", "i", "f", "o"):
+        gates[f"w{g}"] = P((d, nh, hd), ("embed", "ssm_heads", "head_dim"))
+        gates[f"r{g}"] = P((nh, hd, hd), ("ssm_heads", "head_dim", "hd2"),
+                           scale=0.1)
+        gates[f"b{g}"] = P((nh, hd), ("ssm_heads", "head_dim"),
+                           init="ones" if g == "f" else "zeros")
+    ff = max(1, int(4 * d / 3))
+    gates.update({
+        "ff_wi": P((d, ff), ("embed", "mlp")),
+        "ff_wg": P((d, ff), ("embed", "mlp")),
+        "ff_wo": P((ff, d), ("mlp", "embed")),
+        "out_proj": P((nh, hd, d), ("ssm_heads", "head_dim", "embed")),
+    })
+    return gates
+
+
+def slstm_scan(params, xg, state, head_mask=None):
+    """xg: dict g -> (B,S,nh,hd) pre-activations (input part).
+
+    state: (c, n, m, h) each (B,nh,hd).  Exponential-gated scalar cell.
+    """
+    f32 = jnp.float32
+
+    def step(carry, t):
+        c, n, m, h = carry
+
+        def gate(g):
+            rec = jnp.einsum("bhk,hkl->bhl", h, params[f"r{g}"])
+            return xg[g][:, t].astype(f32) + rec + params[f"b{g}"].astype(f32)
+
+        zt = jnp.tanh(gate("z"))
+        it = gate("i")
+        ft = gate("f")
+        ot = jax.nn.sigmoid(gate("o"))
+        m_new = jnp.maximum(ft + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(ft + m - m_new)
+        c = fp * c + ip * zt
+        n = fp * n + ip
+        h_new = ot * c / jnp.maximum(n, 1e-6)
+        if head_mask is not None:
+            h_new = h_new * head_mask.astype(h_new.dtype)[None, :, None]
+        return (c, n, m_new, h_new), h_new
+
+    s = xg["z"].shape[1]
+    (c, n, m, h), hs = jax.lax.scan(step, state, jnp.arange(s))
+    return jnp.moveaxis(hs, 0, 1), (c, n, m, h)
+
+
+def slstm_init_state(b, nh, hd):
+    z = jnp.zeros((b, nh, hd), jnp.float32)
+    return (z, z, jnp.full((b, nh, hd), -1e30, jnp.float32), z)
+
+
+def slstm_fwd(params, x, cfg, *, head_mask=None, return_cache=False,
+              state=None):
+    nh = cfg.num_heads
+    hd = cfg.d_model // nh
+    xg = {g: jnp.einsum("bsd,dhk->bshk", x, params[f"w{g}"])
+          for g in ("z", "i", "f", "o")}
+    if state is None:
+        state = slstm_init_state(x.shape[0], nh, hd)
+    hs, new_state = slstm_scan(params, xg, state, head_mask)
+    y = jnp.einsum("bshk,hkd->bsd", hs.astype(x.dtype), params["out_proj"])
+    # gated FFN (xLSTM post-up-projection)
+    ff = jax.nn.gelu(y @ params["ff_wi"]) * jax.nn.silu(y @ params["ff_wg"])
+    out = y + ff @ params["ff_wo"]
+    if return_cache:
+        return out, {"state": new_state}
+    return out
+
+
+def slstm_decode(params, x, cache, cfg, head_mask=None):
+    out, new = slstm_fwd(params, x, cfg, head_mask=head_mask,
+                         return_cache=True, state=cache["state"])
+    return out, new
+
+
+# ---------------------------------------------------------------------------
+# xLSTM LM assembly (family "ssm": mixed mLSTM/sLSTM stack, unrolled)
+# ---------------------------------------------------------------------------
+
+from repro.models import layers as L  # noqa: E402  (cycle-free: layers has no deps here)
+
+
+def xlstm_spec(cfg):
+    blocks = {}
+    for i in range(cfg.num_layers):
+        kind = "slstm" if i in cfg.slstm_layers else "mlstm"
+        blocks[f"b{i}"] = {
+            "norm": L.norm_spec(cfg.d_model, cfg.norm),
+            "cell": slstm_spec(cfg) if kind == "slstm" else mlstm_spec(cfg),
+        }
+    return {
+        "embed": L.embed_spec(cfg.padded_vocab, cfg.d_model, cfg.tie_embeddings),
+        "blocks": blocks,
+        "final_norm": L.norm_spec(cfg.d_model, cfg.norm),
+    }
+
+
+def xlstm_mask_schema(cfg):
+    nh_m, _ = _heads(cfg)
+    # blocks are unrolled (mixed types) -> per-block schema keys with a path
+    # prefix ("b3:ssm_heads"), consumed generically by core/contribution.py.
+    out = {}
+    for i in range(cfg.num_layers):
+        if i in cfg.slstm_layers:
+            out[f"b{i}:slstm_heads"] = (1, cfg.num_heads)
+        else:
+            out[f"b{i}:ssm_heads"] = (1, nh_m)
+    return out
+
+
+def _xlstm_run(params, x, cfg, masks, mode, cache=None):
+    new_cache = []
+    for i in range(cfg.num_layers):
+        p = params["blocks"][f"b{i}"]
+        kind = "slstm" if i in cfg.slstm_layers else "mlstm"
+        h = L.apply_norm(p["norm"], x, cfg.norm)
+        if kind == "slstm":
+            hm = None if masks is None or f"b{i}:slstm_heads" not in masks \
+                else masks[f"b{i}:slstm_heads"][0]
+            if mode == "train":
+                y = slstm_fwd(p["cell"], h, cfg, head_mask=hm)
+            elif mode == "prefill":
+                y, st = slstm_fwd(p["cell"], h, cfg, head_mask=hm,
+                                  return_cache=True)
+                new_cache.append(st)
+            else:
+                y, st = slstm_decode(p["cell"], h, cache[i], cfg, head_mask=hm)
+                new_cache.append(st)
+        else:
+            hm = None if masks is None or f"b{i}:ssm_heads" not in masks \
+                else masks[f"b{i}:ssm_heads"][0]
+            if mode == "train":
+                y = mlstm_fwd(p["cell"], h, cfg, head_mask=hm)
+            elif mode == "prefill":
+                y, st = mlstm_fwd(p["cell"], h, cfg, head_mask=hm,
+                                  return_cache=True)
+                new_cache.append(st)
+            else:
+                y, st = mlstm_decode(p["cell"], h, cache[i], cfg, head_mask=hm)
+                new_cache.append(st)
+        x = x + y
+    return x, (new_cache if mode != "train" else None)
+
+
+def xlstm_loss(params, batch, cfg, rt=None, masks=None, active_mlp_idx=None):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    if rt:
+        x = L.constrain(x, rt.get("act_spec"))
+    x, _ = _xlstm_run(params, x, cfg, masks, "train")
+    h = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], h)
+    if rt:
+        logits = L.constrain(logits, rt.get("logits_spec"))
+    mask = jnp.ones(tokens.shape, logits.dtype).at[:, -1].set(0.0)
+    return L.cross_entropy_loss(logits[:, :-1], tokens[:, 1:], mask[:, :-1])
+
+
+def xlstm_prefill(params, batch, cfg, rt=None, masks=None):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    x, states = _xlstm_run(params, x, cfg, masks, "prefill")
+    h = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], h[:, -1:])
+    return logits[:, 0], {"states": states,
+                          "pos": jnp.array(tokens.shape[1], jnp.int32)}
+
+
+def xlstm_decode(params, token, cache, cfg, rt=None, masks=None):
+    x = L.embed(params["embed"], token)
+    x, states = _xlstm_run(params, x, cfg, masks, "decode",
+                           cache=cache["states"])
+    h = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], h)
+    return logits[:, 0], {"states": states, "pos": cache["pos"] + 1}

@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (Optimizer, adam, adamw, apply_updates,
+                                    clip_by_global_norm, constant_schedule,
+                                    global_norm, make_optimizer, momentum,
+                                    sgd, warmup_cosine_schedule)
+from repro.optim import compression
+
+__all__ = ["Optimizer", "sgd", "momentum", "adam", "adamw", "make_optimizer",
+           "apply_updates", "clip_by_global_norm", "global_norm",
+           "constant_schedule", "warmup_cosine_schedule", "compression"]

@@ -1,0 +1,148 @@
+"""Optimizers from scratch (no optax in this container): SGD / momentum /
+Adam / AdamW, LR schedules, global-norm clipping.
+
+API mirrors the optax gradient-transformation convention:
+  opt = adamw(lr_schedule, ...)
+  state = opt.init(params)
+  updates, state = opt.update(grads, state, params, step)
+  params = apply_updates(params, updates)
+
+Optimizer states inherit parameter shardings under pjit (same tree shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable        # (grads, state, params, step) -> (updates, state)
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else lr
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine_schedule(peak_lr: float, warmup_steps: int,
+                           total_steps: int, final_frac: float = 0.1):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) /
+                        jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# Gradient utilities
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr) -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(grads, state, params, step):
+        lrv = _lr_at(lr, step)
+        return jax.tree.map(lambda g: -lrv * g.astype(jnp.float32), grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)}
+
+    def update(grads, state, params, step):
+        m = jax.tree.map(lambda mm, g: beta * mm + g.astype(jnp.float32),
+                         state["m"], grads)
+        lrv = _lr_at(lr, step)
+        return jax.tree.map(lambda mm: -lrv * mm, m), {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0,
+          mask_decay: Optional[Callable] = None) -> Optimizer:
+    """AdamW.  ``mask_decay(path_free_leaf)`` can exempt leaves (norms, biases)
+    from decay; by default 1-D leaves are exempt."""
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        step = jnp.asarray(step, jnp.float32) + 1.0
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** step
+        bc2 = 1 - b2 ** step
+        lrv = _lr_at(lr, step - 1)
+
+        def upd(mm, vv, p):
+            u = (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+            decay = weight_decay if p.ndim >= 2 else 0.0
+            return -lrv * (u + decay * p.astype(jnp.float32))
+
+        return jax.tree.map(upd, m, v, params), {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    return adamw(lr, b1, b2, eps, weight_decay=0.0)
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr, kw.get("beta", 0.9))
+    if name == "adam":
+        return adam(lr, kw.get("b1", 0.9), kw.get("b2", 0.999),
+                    kw.get("eps", 1e-8))
+    if name == "adamw":
+        return adamw(lr, kw.get("b1", 0.9), kw.get("b2", 0.95),
+                     kw.get("eps", 1e-8), kw.get("weight_decay", 0.1))
+    raise ValueError(name)

@@ -1,0 +1,397 @@
+"""Trip-count-weighted HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop BODY ONCE, so every
+``lax.scan`` (layers, microbatches, KV chunks, recurrences) under-reports
+FLOPs/bytes/collectives by its trip count.  This module re-walks the
+post-optimization HLO text: each computation's cost is summed per
+instruction, and ``while`` ops multiply (body + cond) cost by the
+``known_trip_count`` XLA annotates in backend_config.
+
+FLOP rules follow HloCostAnalysis: dot = 2 * out_elems * contracted_elems,
+elementwise = out_elems, reduce = in_elems; bytes = operands + output.
+Collectives (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute) accumulate their shape bytes, weighted by enclosing trip
+counts — which the flat text scan in hlo_analysis.collective_bytes misses.
+
+Validated against cost_analysis on loop-free programs (tests/test_hlo_cost.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "tanh", "exponential", "log", "negate", "abs", "rsqrt", "sqrt", "sign",
+    "compare", "select", "and", "or", "xor", "not", "convert", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "clamp", "sine",
+    "cosine", "logistic", "exponential-minus-one", "log-plus-one", "atan2",
+    "remainder", "is-finite", "erf", "cbrt", "tan",
+}
+
+def _parse_instr_line(line: str) -> Optional["Instr"]:
+    """Procedural instruction parse: handles tuple types with /*index=N*/
+    comments (which contain '=' and break naive regexes)."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    eq = s.find(" = ")
+    if eq < 0 or not s.startswith("%") and not s[:1].isalpha():
+        return None
+    name = s[:eq].strip().lstrip("%")
+    rest = s[eq + 3:].strip()
+    if rest.startswith("("):                      # tuple type: balanced scan
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        type_str, rest2 = rest[:end + 1], rest[end + 1:].strip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest2 = rest[:sp], rest[sp + 1:].strip()
+    p = rest2.find("(")
+    if p <= 0:
+        return None
+    op = rest2[:p].strip()
+    if not re.fullmatch(r"[\w\-]+", op):
+        return None
+    return Instr(name, type_str, op, rest2[p + 1:])
+
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+
+_TRIP_RE = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_CALL_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+#: ops that move no HBM bytes (views / metadata / control flow plumbing)
+_NO_BYTES = {"get-tuple-element", "tuple", "parameter", "constant", "bitcast",
+             "after-all", "partition-id", "replica-id", "opt-barrier"}
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    """(total elements, total bytes) over all array literals in a type."""
+    elems = 0
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str          # operand list + attributes (everything after '(')
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    symtab: Dict[str, str]      # instr name -> type string
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and "{" in line:
+                cur = Computation(m.group(1), [], {})
+            continue
+        s = line.strip()
+        if s.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        inst = _parse_instr_line(line)
+        if inst:
+            cur.instrs.append(inst)
+            cur.symtab[inst.name] = inst.type_str
+    return comps
+
+
+def _dot_flops(inst: Instr, symtab: Dict[str, str]) -> float:
+    out_elems, _ = _shape_elems_bytes(inst.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.rest)
+    ops = _OPERAND_RE.findall(inst.rest)
+    if not m or not ops:
+        return 2.0 * out_elems
+    lhs_type = symtab.get(ops[0], "")
+    sm = _SHAPE_RE.search(lhs_type)
+    if not sm:
+        return 2.0 * out_elems
+    dims = [int(d) for d in sm.group(2).split(",") if d]
+    contracted = 1
+    for i in (int(x) for x in m.group(1).split(",") if x):
+        if i < len(dims):
+            contracted *= dims[i]
+    return 2.0 * out_elems * contracted
+
+
+def _operand_bytes(inst: Instr, symtab: Dict[str, str]) -> int:
+    total = 0
+    # operands appear before the first '),'; attributes reference %comps too,
+    # so restrict to the operand parenthesis segment.
+    depth = 1
+    end = 0
+    for i, ch in enumerate(inst.rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    seg = inst.rest[:end] if end else inst.rest
+    for op_name in _OPERAND_RE.findall(seg):
+        t = symtab.get(op_name)
+        if t:
+            total += _shape_elems_bytes(t)[1]
+    return total
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Optional[Dict[str, float]] = None
+    transcendental: float = 0.0
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {k: 0.0 for k in _COLLECTIVES}
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendental += other.transcendental * mult
+        for k in _COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+
+
+class Analyzer:
+    def __init__(self, hlo_text: str):
+        self.comps = parse_module(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+        self._fusion_bytes_memo: Dict[str, float] = {}
+        self.entry = self._find_entry(hlo_text)
+
+    @staticmethod
+    def _find_entry(text: str) -> Optional[str]:
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+                if m:
+                    return m.group(1)
+        return None
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()            # cycle guard
+        comp = self.comps.get(name)
+        if comp is None:
+            return self._memo[name]
+        total = Cost()
+        for inst in comp.instrs:
+            total.add(self._instr_cost(inst, comp))
+        self._memo[name] = total
+        return total
+
+    def _fusion_input_bytes(self, called: str) -> float:
+        """Input bytes of one fusion: a parameter consumed ONLY by
+        slice-type ops contributes the sliced bytes, not its full size
+        (scan bodies dynamic-slice stacked layer params -> one layer per
+        trip).  Mirrors HloCostAnalysis's fusion handling."""
+        if called in self._fusion_bytes_memo:
+            return self._fusion_bytes_memo[called]
+        comp = self.comps.get(called)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        sliced_ops = ("dynamic-slice", "slice", "gather")
+        for p in comp.instrs:
+            if p.op != "parameter":
+                continue
+            _, p_bytes = _shape_elems_bytes(p.type_str)
+            consumers = [i for i in comp.instrs
+                         if i is not p and p.name in _OPERAND_RE.findall(
+                             i.rest.split("),")[0])]
+            if consumers and all(cn.op in sliced_ops for cn in consumers):
+                total += sum(_shape_elems_bytes(cn.type_str)[1]
+                             for cn in consumers)
+            else:
+                total += p_bytes
+        self._fusion_bytes_memo[called] = total
+        return total
+
+    def _instr_cost(self, inst: Instr, comp: Computation) -> Cost:
+        c = Cost()
+        op = inst.op
+        out_elems, out_bytes = _shape_elems_bytes(inst.type_str)
+
+        if op == "while":
+            trip = 1
+            m = _TRIP_RE.search(inst.rest)
+            if m:
+                trip = int(m.group(1))
+            body = _BODY_RE.search(inst.rest)
+            cond = _COND_RE.search(inst.rest)
+            if body:
+                c.add(self.comp_cost(body.group(1)), trip)
+            if cond:
+                c.add(self.comp_cost(cond.group(1)), trip)
+            return c
+        if op == "fusion":
+            m = _CALLS_RE.search(inst.rest)
+            if m:
+                inner = self.comp_cost(m.group(1))
+                # fused ops never touch HBM: count inner FLOPs/collectives,
+                # but bytes are the fusion boundary only (HloCostAnalysis).
+                c.flops += inner.flops
+                c.transcendental += inner.transcendental
+                for k in _COLLECTIVES:
+                    c.coll[k] += inner.coll[k]
+                c.bytes += out_bytes + self._fusion_input_bytes(m.group(1))
+            else:
+                c.bytes += out_bytes + _operand_bytes(inst, comp.symtab)
+            return c
+        if op in _NO_BYTES:
+            return c
+        if op in ("call", "conditional", "sort", "scatter", "reduce",
+                  "reduce-window", "select-and-scatter", "map",
+                  "all-reduce", "reduce-scatter"):
+            # ops with sub-computations (to_apply) — count the sub once per
+            # output element for reduce-likes is overkill; HloCostAnalysis
+            # treats reduce as in_elems flops: approximate below, and still
+            # descend into call/conditional bodies.
+            if op in ("call", "conditional"):
+                for sub in _CALL_RE.findall(inst.rest):
+                    c.add(self.comp_cost(sub))
+        for kind in _COLLECTIVES:
+            if op == kind or op == kind + "-start":
+                wire = out_bytes
+                # XLA's CPU backend PROMOTES bf16 reductions to f32
+                # ("to_apply=%add..._promoted"): the wire dtype on TPU is
+                # bf16 — count half the promoted f32 bytes.
+                if "_promoted" in inst.rest and "f32[" in inst.type_str:
+                    wire = out_bytes / 2.0
+                c.coll[kind] += wire
+                break
+        if op == "dot":
+            c.flops += _dot_flops(inst, comp.symtab)
+        elif op == "convolution":
+            # rough: 2 * out * (kernel elems) — fine, CNNs are not dry-run cells
+            c.flops += 2.0 * out_elems
+        elif op in _ELEMWISE:
+            c.flops += out_elems
+            if op in ("tanh", "exponential", "log", "logistic", "power",
+                      "sine", "cosine", "erf", "tan"):
+                c.transcendental += out_elems
+        elif op in ("reduce", "reduce-window"):
+            c.flops += _operand_bytes(inst, comp.symtab) / 4.0  # ~in_elems
+        elif op == "all-reduce" or op == "all-reduce-start":
+            c.flops += out_elems
+
+        # ---- bytes: sliced/indexed accesses only touch what they produce,
+        # NOT the whole operand (a scan body dynamic-slicing stacked layer
+        # params reads one layer per trip, not the full stack) ----
+        if op in ("dynamic-slice", "slice", "gather"):
+            c.bytes += 2.0 * out_bytes
+        elif op == "dynamic-update-slice":
+            ops_ = _OPERAND_RE.findall(inst.rest.split("),")[0])
+            upd = comp.symtab.get(ops_[1], "") if len(ops_) > 1 else ""
+            c.bytes += 2.0 * _shape_elems_bytes(upd)[1]
+        elif op == "scatter":
+            ops_ = _OPERAND_RE.findall(inst.rest.split("),")[0])
+            upd = comp.symtab.get(ops_[-1], "") if ops_ else ""
+            c.bytes += 2.0 * _shape_elems_bytes(upd)[1] + out_bytes
+        else:
+            c.bytes += out_bytes + _operand_bytes(inst, comp.symtab)
+        return c
+
+    def total(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.comp_cost(self.entry)
+
+
+def weighted_cost(hlo_text: str) -> dict:
+    t = Analyzer(hlo_text).total()
+    return {"flops": t.flops, "bytes": t.bytes,
+            "collectives": dict(t.coll),
+            "collective_bytes": sum(t.coll.values()),
+            "transcendental": t.transcendental}
+
+
+def pattern_bytes(hlo_text: str, pattern: str) -> float:
+    """Trip-weighted HBM bytes of instructions whose metadata op_name
+    contains ``pattern`` (jax.named_scope names appear there).
+
+    Used for the flash-attention roofline adjustment: the bytes attributed
+    to the "chunked_attention" scope are the S^2 score-block traffic that
+    the Pallas kernel (kernels/flash_attention.py) keeps in VMEM.
+    """
+    a = Analyzer(hlo_text)
+    total = 0.0
+
+    def walk(name: str, weight: float, seen):
+        nonlocal total
+        if name in seen:
+            return
+        comp = a.comps.get(name)
+        if comp is None:
+            return
+        for inst in comp.instrs:
+            if inst.op == "while":
+                trip = 1
+                m = _TRIP_RE.search(inst.rest)
+                if m:
+                    trip = int(m.group(1))
+                body = _BODY_RE.search(inst.rest)
+                cond = _COND_RE.search(inst.rest)
+                if body:
+                    walk(body.group(1), weight * trip, seen)
+                if cond:
+                    walk(cond.group(1), weight * trip, seen)
+                continue
+            if pattern in inst.rest:
+                total += a._instr_cost(inst, comp).bytes * weight
+
+    walk(a.entry, 1.0, set())
+    return total

@@ -1,0 +1,176 @@
+"""Logical-axis sharding rule engine (MaxText-style) with divisibility-aware
+fallback.
+
+Every parameter carries logical axis names (models/module.py).  RULES maps a
+logical axis to candidate mesh axes in priority order; the solver assigns the
+first candidate that (a) is present in the mesh, (b) still unused within this
+tensor's spec, and (c) divides the dim size — otherwise the dim replicates.
+This is how e.g. internvl2's 14 heads fall back to replication while its
+d_ff = 4864 = 16*304 tensor-shards (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+#: logical axis -> mesh-axis candidates (first fit wins).
+#: "embed" shards over data = FSDP; heads/mlp/experts over model = TP/EP.
+RULES: dict = {
+    "vocab": ("model",),
+    "embed": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "ssm_heads": ("model",),
+    "q_lora": ("model",),
+    "kv_lora": (),
+    "head_dim": (),
+    "hd2": (),
+    "conv_k": (),
+    "ssm_state": (),
+    "layers": (),
+    "filters": (),
+    None: (),
+}
+
+#: batch/seq rules for activations & caches
+BATCH_AXES = ("pod", "data")
+
+#: params below this size replicate their "embed" dim (no FSDP): the weight
+#: all-gathers FSDP induces cost more than the HBM they save on small models.
+FSDP_THRESHOLD = 8e9
+
+
+def rules_for(cfg, kind: str = "train") -> dict:
+    """Arch/workload-dependent rules.
+
+    * FSDP (embed -> data) only for big models (small models pay more in
+      weight all-gathers than they save in HBM).
+    * decode with a SMALL expert pool replicates experts: dispatching a
+      few hundred tokens through expert-parallel all-to-alls costs more
+      than holding a local expert copy (EXPERIMENTS.md §Perf cell B).
+    """
+    rules = dict(RULES)
+    if cfg.n_params() < FSDP_THRESHOLD:
+        rules["embed"] = ()
+        rules["q_lora"] = ("model",)
+    if kind == "decode" and cfg.family == "moe":
+        expert_bytes = (cfg.num_experts * 3 * cfg.d_model * cfg.moe_d_ff *
+                        cfg.num_layers * 2)
+        if expert_bytes < 4e9:                       # fits HBM comfortably
+            rules["experts"] = ()
+    return rules
+
+
+def _mesh_size(mesh, axis: str) -> int:
+    """Axis size; works for both Mesh and AbstractMesh."""
+    return dict(mesh.shape).get(axis, 0)
+
+
+def spec_for_axes(axes: Tuple[Optional[str], ...],
+                  shape: Tuple[int, ...],
+                  mesh: Mesh,
+                  rules: Optional[dict] = None) -> P:
+    """PartitionSpec for one tensor from its logical axes + concrete shape."""
+    rules = rules or RULES
+    used: set = set()
+    entries = []
+    for name, dim in zip(axes, shape):
+        assigned = None
+        for cand in rules.get(name, ()):
+            size = _mesh_size(mesh, cand)
+            if size and cand not in used and dim % size == 0 and dim >= size:
+                assigned = cand
+                used.add(cand)
+                break
+        entries.append(assigned)
+    return P(*entries)
+
+
+def param_shardings(axes_tree, shape_tree, mesh: Mesh, rules=None):
+    """NamedSharding tree for a whole param pytree.
+
+    ``shape_tree`` is any tree of arrays / ShapeDtypeStructs aligned with
+    ``axes_tree``.
+    """
+    def one(axes, leaf):
+        return NamedSharding(mesh, spec_for_axes(axes, leaf.shape, mesh,
+                                                 rules))
+
+    return jax.tree.map(one, axes_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        all(isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_spec(shape: Tuple[int, ...], mesh: Mesh,
+               batch_size: int) -> P:
+    """Shard the leading batch dim over ("pod","data")."""
+    axes_avail = [a for a in BATCH_AXES if _mesh_size(mesh, a)]
+    prod = int(np.prod([_mesh_size(mesh, a) for a in axes_avail]) or 1)
+    if shape and shape[0] == batch_size and batch_size % prod == 0 and prod > 1:
+        return P(tuple(axes_avail), *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def batch_shardings(batch_tree, mesh: Mesh, batch_size: int):
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, batch_spec(l.shape, mesh, batch_size)),
+        batch_tree)
+
+
+def cache_spec(shape: Tuple[int, ...], mesh: Mesh, batch: int, seq: int,
+               kv_heads: int) -> P:
+    """KV/SSM-cache sharding for serve cells.
+
+    Priority: batch dim over ("pod","data"); if batch is too small
+    (long-context batch=1), the SEQUENCE dim takes the data axes instead
+    (sequence-parallel cache).  A kv-heads-sized dim takes "model" when
+    divisible; otherwise the sequence dim absorbs "model" too (cache-sequence
+    sharding, standard for GQA models whose kv_heads < TP degree).
+    """
+    dims = list(shape)
+    entries: list = [None] * len(dims)
+    axes_avail = [a for a in BATCH_AXES if _mesh_size(mesh, a)]
+    dprod = int(np.prod([_mesh_size(mesh, a) for a in axes_avail]) or 1)
+    msize = _mesh_size(mesh, "model")
+
+    batch_dim = next((i for i, d in enumerate(dims) if d == batch), None)
+    seq_dim = next((i for i, d in enumerate(dims)
+                    if d == seq and i != batch_dim), None)
+    kv_dim = next((i for i, d in enumerate(dims)
+                   if d == kv_heads and i not in (batch_dim, seq_dim)), None)
+
+    data_used = False
+    if batch_dim is not None and batch % dprod == 0 and dprod > 1:
+        entries[batch_dim] = tuple(axes_avail)
+        data_used = True
+    elif seq_dim is not None and seq % dprod == 0:
+        entries[seq_dim] = tuple(axes_avail)
+        data_used = True
+
+    if msize:
+        if kv_dim is not None and kv_heads % msize == 0 and kv_heads >= msize:
+            entries[kv_dim] = "model"
+        elif seq_dim is not None and entries[seq_dim] is None and \
+                seq % msize == 0:
+            entries[seq_dim] = "model"
+        elif seq_dim is not None and data_used and \
+                entries[seq_dim] == tuple(axes_avail) and batch_dim is None:
+            pass                                       # seq already on data
+    return P(*entries)
+
+
+def cache_shardings(cache_tree, mesh: Mesh, batch: int, seq: int,
+                    kv_heads: int):
+    return jax.tree.map(
+        lambda l: NamedSharding(
+            mesh, cache_spec(l.shape, mesh, batch, seq, kv_heads)),
+        cache_tree)
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree.map(lambda l: NamedSharding(mesh, P()), tree)

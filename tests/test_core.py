@@ -1,0 +1,137 @@
+"""Unit tests for the Helios core: selection (Eq. 2), rotation (§VI.A),
+contribution (Eq. 1), masking, volume control, identification."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import HeliosConfig
+from repro.core import contribution as C
+from repro.core import masking as MK
+from repro.core import selection as S
+from repro.core import soft_train as ST
+from repro.core import volume as V
+from repro.core.identification import (DeviceProfile, identify_resource_based,
+                                       identify_time_based, time_cost_model)
+
+
+def test_selection_counts():
+    """Eq. 2: ~P*n units selected per row; top-P_s kept by contribution."""
+    key = jax.random.PRNGKey(0)
+    scores = {"mlp": jnp.arange(512, dtype=jnp.float32).reshape(2, 256)}
+    forced = {"mlp": jnp.zeros((2, 256), bool)}
+    masks = S.select_masks(scores, forced, jnp.asarray(0.25), p_s=0.2,
+                           key=key)
+    count = int(masks["mlp"][0].sum())
+    assert abs(count - 64) <= 1, count
+    # the k_top = 0.2*64 ~ 13 highest-score units must be selected
+    k_top = int(round(0.2 * 64))
+    top_idx = np.argsort(-np.asarray(scores["mlp"][0]))[:k_top]
+    assert np.asarray(masks["mlp"][0])[top_idx].all()
+
+
+def test_selection_rotates():
+    """The random component changes across cycles (model integrity)."""
+    scores = {"mlp": jnp.zeros((1, 256))}
+    forced = {"mlp": jnp.zeros((1, 256), bool)}
+    m1 = S.select_masks(scores, forced, jnp.asarray(0.3), 0.1,
+                        jax.random.PRNGKey(1))["mlp"]
+    m2 = S.select_masks(scores, forced, jnp.asarray(0.3), 0.1,
+                        jax.random.PRNGKey(2))["mlp"]
+    assert float(jnp.abs(m1 - m2).sum()) > 0
+
+
+def test_forced_units_always_selected():
+    scores = {"mlp": jnp.ones((1, 128))}
+    forced = {"mlp": jnp.zeros((1, 128), bool).at[0, 7].set(True)}
+    masks = S.select_masks(scores, forced, jnp.asarray(0.1), 0.1,
+                           jax.random.PRNGKey(0))
+    assert float(masks["mlp"][0, 7]) == 1.0
+
+
+def test_rotation_threshold_and_counters():
+    """C_s counts consecutive skips; threshold = 1 + 1/P (§VI.A)."""
+    skip = {"mlp": jnp.array([[0, 3, 5]], jnp.int32)}
+    masks = {"mlp": jnp.array([[1.0, 0.0, 0.0]])}
+    new = S.update_skip_counts(skip, masks)
+    np.testing.assert_array_equal(np.asarray(new["mlp"]), [[0, 4, 6]])
+    thr = S.rotation_threshold(jnp.asarray(0.25))
+    assert float(thr) == 5.0
+    forced = S.forced_units(new, thr)
+    np.testing.assert_array_equal(np.asarray(forced["mlp"]),
+                                  [[False, False, True]])
+
+
+def test_no_unit_starves_over_cycles():
+    """Every unit joins at least once within a bounded number of cycles."""
+    hcfg = HeliosConfig(p_s=0.1)
+    schema = {"mlp": (1, 64)}
+    st = ST.init_state(schema, volume=0.25, seed=0)
+    ever = np.zeros(64, bool)
+    for _ in range(25):
+        st = ST.begin_cycle(st, hcfg)
+        ever |= np.asarray(st["masks"]["mlp"][0]) > 0
+        # constant scores: rotation comes from randomness + forced rejoin
+        st = ST.end_cycle(st, {"mlp": jnp.ones((1, 64))}, hcfg)
+    assert ever.all(), f"{(~ever).sum()} units never trained"
+
+
+def test_contribution_eq1_is_param_delta():
+    new = {"w": jnp.full((4, 8), 2.0)}
+    old = {"w": jnp.zeros((4, 8))}
+    d = C.delta(new, old)
+    scores = C.unit_scores(d, {"w": ("embed", "mlp")}, {"mlp": (1, 8)})
+    np.testing.assert_allclose(np.asarray(scores["mlp"]),
+                               np.full((1, 8), 8.0))
+
+
+def test_expand_masks_outer_product():
+    params = {"wi": jnp.ones((2, 4, 6))}           # (E, d, ff)
+    axes = {"wi": ("experts", "embed", "mlp")}
+    masks = {"experts": jnp.array([[1.0, 0.0]]),
+             "mlp": jnp.array([[1, 1, 0, 0, 1, 1]], jnp.float32)}
+    out = MK.expand_masks(axes, masks, params)
+    m = np.asarray(out["wi"])
+    assert m[0, :, 0].all() and not m[1].any()
+    assert (m[0, :, 2] == 0).all()
+
+
+def test_selected_fraction():
+    masks = {"a": jnp.array([[1.0, 0.0, 1.0, 0.0]])}
+    assert float(MK.selected_fraction(masks)) == 0.5
+
+
+def test_volume_controller_converges():
+    """adapt_volume drives observed time to the deadline."""
+    vol, speed = 1.0, 4.0                      # device 4x slower
+    for _ in range(12):
+        observed = speed * vol
+        vol = V.adapt_volume(vol, observed, deadline=1.0)
+    assert abs(speed * vol - 1.0) < 0.15, (vol, speed * vol)
+
+
+def test_volume_from_profile():
+    assert V.volume_from_profile(4.0, 1.0) == 0.25
+    assert V.volume_from_profile(0.5, 1.0) == 1.0
+    assert V.volume_from_profile(100.0, 1.0, min_volume=0.125) == 0.125
+
+
+def test_assign_volume_levels():
+    out = V.assign_volume_levels([1.0, 5.0, 2.0, 4.0], (0.25, 0.5, 0.75), 2)
+    assert out[1] == 0.25 and out[3] == 0.5 and out[0] == 1.0 and out[2] == 1.0
+
+
+def test_identification_paths_agree():
+    devs = [DeviceProfile("fast", 25, 400, 8000, 100, 1.0),
+            DeviceProfile("fast2", 25, 400, 8000, 100, 1.0),
+            DeviceProfile("slow", 5, 100, 2000, 100, 3.0)]
+    _, s_resource = identify_resource_based(100, 200, devs)
+    _, s_time = identify_time_based(lambda d: None, 3,
+                                    simulated_times=[1.0, 1.0, 3.0])
+    assert s_resource == [2] and s_time == [2]
+
+
+def test_time_cost_model_formula():
+    d = DeviceProfile("x", compute_gflops=10, memory_mb=100,
+                      mem_bandwidth=1000, net_bandwidth=50)
+    te = time_cost_model(workload_gflop=20, memory_mb=100, dev=d)
+    assert abs(te - (20 / 10 + 100 / 1000 + 100 / 50)) < 1e-9

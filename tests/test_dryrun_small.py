@@ -1,0 +1,65 @@
+"""Scaled-down dry-run in a SUBPROCESS (own XLA_FLAGS: 16 host devices,
+4x4 / 2x2x4 mesh) — proves the full lower+compile+roofline path end-to-end
+without disturbing this process's single-device jax."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_cell(arch, shape, multi_pod=False, fl_round=False, tmp="/tmp/dr"):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"),
+               REPRO_HOST_DEVICES="16",
+               REPRO_MESH="2x2x4" if multi_pod else "4x4")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", tmp]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    if fl_round:
+        cmd.append("--fl-round")
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    tag = ("multi" if multi_pod else "single") + ("_fl" if fl_round else "")
+    with open(os.path.join(tmp, f"{arch}_{shape}_{tag}.json")) as f:
+        return json.load(f)
+
+
+@pytest.mark.slow
+def test_dryrun_train_single(tmp_path):
+    rec = _run_cell("xlstm-125m", "train_4k", tmp=str(tmp_path))
+    assert rec["status"] == "ok"
+    r = rec["roofline"]
+    assert r["t_compute_s"] > 0 and r["t_memory_s"] > 0
+    assert rec["collective_bytes"] > 0          # DP grad sync must exist
+    assert rec["memory"].get("peak_bytes", 1) < 16e9   # fits v5e HBM
+
+
+@pytest.mark.slow
+def test_dryrun_decode_multi_pod(tmp_path):
+    rec = _run_cell("xlstm-125m", "decode_32k", multi_pod=True,
+                    tmp=str(tmp_path))
+    assert rec["status"] == "ok"
+    assert rec["mesh"] == [2, 2, 4]
+
+
+@pytest.mark.slow
+def test_dryrun_fl_round_multi_pod(tmp_path):
+    """The federated round step (pods = clients) lowers and compiles."""
+    rec = _run_cell("xlstm-125m", "train_4k", multi_pod=True, fl_round=True,
+                    tmp=str(tmp_path))
+    assert rec["status"] == "ok"
+    assert rec["fl_round"] is True
+
+
+def test_long500k_skip_reason():
+    from repro.configs import ARCHS, applicable, get_shape
+    ok, why = applicable(ARCHS["deepseek-7b"], get_shape("long_500k"))
+    assert not ok and "full-attention" in why
+    ok2, _ = applicable(ARCHS["zamba2-1.2b"], get_shape("long_500k"))
+    assert ok2

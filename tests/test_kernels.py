@@ -1,0 +1,137 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.masked_matmul import masked_matmul
+from repro.kernels.ssd_scan import ssd_diag
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n,bn", [
+    (128, 128, 256, 128),
+    (256, 384, 512, 128),
+    (128, 256, 384, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("frac", [1.0, 0.5, 0.25])
+def test_masked_matmul(m, k, n, bn, dtype, frac):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, k), dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n), dtype)
+    nb = n // bn
+    alive = (jax.random.uniform(jax.random.fold_in(key, 2), (nb,)) < frac)
+    alive = alive.at[0].set(True)                    # at least one live block
+    got = masked_matmul(x, w, alive, block_m=128, block_n=bn, block_k=128,
+                        interpret=True)
+    want = ref.masked_matmul_ref(x, w, alive, bn)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_masked_matmul_skips_flops():
+    """Dead blocks produce exact zeros (the skip actually happened)."""
+    x = jnp.ones((128, 128))
+    w = jnp.ones((128, 256))
+    alive = jnp.array([1, 0], jnp.int32)
+    y = masked_matmul(x, w, alive, interpret=True)
+    assert float(jnp.abs(y[:, 128:]).max()) == 0.0
+    assert float(jnp.abs(y[:, :128]).min()) > 0.0
+
+
+@pytest.mark.parametrize("b,h,sq,sk,hd", [
+    (1, 2, 256, 256, 64),
+    (2, 1, 128, 384, 32),
+    (1, 4, 384, 384, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(b, h, sq, sk, hd, dtype, causal):
+    if causal and sq != sk:
+        pytest.skip("causal requires square here")
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (b, h, sq, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, h, sk, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, h, sk, hd), dtype)
+    got = flash_attention(q, k, v, causal=causal, block_q=128, block_k=128,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               **_tol(dtype))
+
+
+def test_flash_matches_model_chunked():
+    """Kernel == the model's pure-JAX chunked attention (same schedule)."""
+    from repro.models.layers import chunked_attention
+    key = jax.random.PRNGKey(3)
+    b, s, h, hd = 2, 512, 4, 64
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, hd))
+    got = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=True,
+                          interpret=True).transpose(0, 2, 1, 3)
+    want = chunked_attention(q, k, v, causal=True, q_chunk=128, kv_chunk=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("b,nc,L,ds,nh,hd", [
+    (1, 2, 64, 16, 2, 32),
+    (2, 1, 128, 64, 4, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_diag(b, nc, L, ds, nh, hd, dtype):
+    key = jax.random.PRNGKey(2)
+    cr = jax.random.normal(key, (b, nc, L, ds), dtype)
+    br = jax.random.normal(jax.random.fold_in(key, 1), (b, nc, L, ds), dtype)
+    # decreasing cumulative log-decay (realistic: a <= 0)
+    a = -jnp.abs(jax.random.normal(jax.random.fold_in(key, 2),
+                                   (b, nc, L, nh), jnp.float32)) * 0.1
+    cum = jnp.cumsum(a, axis=2)
+    dtx = jax.random.normal(jax.random.fold_in(key, 3), (b, nc, L, nh, hd),
+                            dtype)
+    got = ssd_diag(cr, br, cum, dtx, interpret=True)
+    want = ref.ssd_diag_ref(cr, br, cum, dtx)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_ssd_kernel_matches_model_path():
+    """ssd_diag == the intra-chunk term inside models/ssm.ssd_chunked when
+    the inter-chunk state is zero (single chunk, h0=None)."""
+    from repro.models.ssm import ssd_chunked
+    key = jax.random.PRNGKey(5)
+    b, s, nh, hd, ds = 1, 64, 2, 32, 16
+    xh = jax.random.normal(key, (b, s, nh, hd))
+    Bm = jax.random.normal(jax.random.fold_in(key, 1), (b, s, ds))
+    Cm = jax.random.normal(jax.random.fold_in(key, 2), (b, s, ds))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 3),
+                                           (b, s, nh)))
+    A = -jnp.ones((nh,))
+    y, _ = ssd_chunked(xh, Bm, Cm, dt, A, chunk=s)     # one chunk: diag only
+    a = (dt * A[None, None, :]).astype(jnp.float32)
+    cum = jnp.cumsum(a.reshape(b, 1, s, nh), axis=2)
+    dtx = (dt[..., None] * xh).reshape(b, 1, s, nh, hd)
+    got = ssd_diag(Cm.reshape(b, 1, s, ds), Bm.reshape(b, 1, s, ds),
+                   cum, dtx, interpret=True)
+    np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(y),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_block_align_mask():
+    m = jnp.array([1, 0, 0, 0, 0, 0, 0, 1], jnp.float32)
+    out = ops.block_align_mask(m, 4)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  [1, 1, 1, 1, 1, 1, 1, 1])
+    m2 = jnp.array([0, 0, 0, 0, 1, 0, 0, 0], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(ops.block_align_mask(m2, 4)),
+                                  [0, 0, 0, 0, 1, 1, 1, 1])

@@ -1,0 +1,105 @@
+"""Equivalence of the parallel (chunkwise) recurrence algorithms vs their
+step-by-step oracles, and prefill+decode vs full-forward consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SMOKE_SHAPE, reduced
+from repro.models import build, default_runtime, init_params, make_full_masks
+from repro.models.ssm import ssd_chunked, ssd_recurrent_ref
+from repro.models.xlstm import mlstm_chunkwise, mlstm_recurrent_ref
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_ssd_chunked_matches_recurrent(chunk):
+    key = jax.random.PRNGKey(0)
+    b, s, nh, hd, ds = 2, 64, 3, 8, 4
+    xh = jax.random.normal(key, (b, s, nh, hd))
+    Bm = jax.random.normal(jax.random.fold_in(key, 1), (b, s, ds))
+    Cm = jax.random.normal(jax.random.fold_in(key, 2), (b, s, ds))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 3),
+                                           (b, s, nh)))
+    A = -jnp.abs(jax.random.normal(jax.random.fold_in(key, 4), (nh,)))
+    y_c, h_c = ssd_chunked(xh, Bm, Cm, dt, A, chunk=chunk)
+    y_r, h_r = ssd_recurrent_ref(xh, Bm, Cm, dt, A)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [8, 32])
+def test_mlstm_chunkwise_matches_recurrent(chunk):
+    key = jax.random.PRNGKey(1)
+    b, s, nh, hd = 2, 64, 2, 16
+    q = jax.random.normal(key, (b, s, nh, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, nh, hd)) / 4
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, nh, hd))
+    gi = jax.random.normal(jax.random.fold_in(key, 3), (b, s, nh))
+    gf = jax.random.normal(jax.random.fold_in(key, 4), (b, s, nh)) + 2.0
+    h_c, (C_c, n_c, m_c) = mlstm_chunkwise(q, k, v, gi, gf, chunk=chunk)
+    h_r, (C_r, n_r, m_r) = mlstm_recurrent_ref(q, k, v, gi, gf)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_r),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(m_c), np.asarray(m_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(C_c), np.asarray(C_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "deepseek-v2-236b",
+                                  "xlstm-125m", "zamba2-1.2b",
+                                  "seamless-m4t-large-v2"])
+def test_prefill_plus_decode_matches_longer_prefill(arch):
+    """Golden consistency: prefill(S) then decode(1 token) must produce the
+    same final logits as prefill(S+1) over the extended prompt."""
+    cfg = reduced(ARCHS[arch])
+    api = build(cfg)
+    key = jax.random.PRNGKey(2)
+    params = init_params(key, cfg)
+    rt = default_runtime(cfg, SMOKE_SHAPE)
+    rt["attn_impl"] = "dense"
+    masks = make_full_masks(cfg)
+    b, s = 2, 17
+
+    toks = jax.random.randint(jax.random.fold_in(key, 1), (b, s + 1), 0,
+                              cfg.vocab_size)
+    batch_s = {"tokens": toks[:, :s]}
+    batch_s1 = {"tokens": toks}
+    if cfg.family == "vlm":
+        img = jax.random.normal(jax.random.fold_in(key, 2),
+                                (b, cfg.num_image_tokens, cfg.d_model))
+        batch_s["image_embeds"] = batch_s1["image_embeds"] = img
+    if cfg.family == "encdec":
+        enc = jax.random.normal(jax.random.fold_in(key, 3),
+                                (b, s, cfg.d_model))
+        batch_s["enc_embeds"] = batch_s1["enc_embeds"] = enc
+
+    logits_s1, _ = api.prefill_fn(params, batch_s1, cfg, rt, masks)
+
+    _, cache = api.prefill_fn(params, batch_s, cfg, rt, masks)
+    # grow KV caches by one slot so decode can write at position s
+    def grow(leaf):
+        if leaf.ndim >= 2 and leaf.shape[-2:] != () and any(
+                d == s for d in leaf.shape):
+            ax = [i for i, d in enumerate(leaf.shape) if d == s]
+            pad = [(0, 0)] * leaf.ndim
+            pad[ax[0]] = (0, 1)
+            return jnp.pad(leaf, pad)
+        return leaf
+    if cfg.family in ("dense", "moe", "vlm", "hybrid"):
+        cache = jax.tree.map(grow, cache)
+    elif cfg.family == "encdec":
+        # grow only the decoder SELF cache; padding the cross cache would
+        # add a phantom encoder key (cross-attention is non-causal)
+        cache["kv"] = {**cache["kv"],
+                       "self": jax.tree.map(grow, cache["kv"]["self"])}
+    logits_dec, _ = api.decode_fn(params, toks[:, s:s + 1], cache, cfg, rt,
+                                  masks)
+    # MLA decode uses the ABSORBED contraction order (scores against the
+    # latent) — mathematically identical, numerically ~2e-3 on f32 logits
+    atol = 5e-3 if cfg.use_mla else 2e-3
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_s1),
+                               rtol=2e-3, atol=atol)

@@ -1,0 +1,90 @@
+"""Hypothesis property tests for Prop. 2 (gradient-variance bound) and the
+system's selection invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import selection as S
+from repro.core import theory as T
+
+_gvec = st.lists(st.floats(-5, 5, allow_nan=False, width=32),
+                 min_size=8, max_size=64).map(np.asarray)
+
+
+@settings(max_examples=30, deadline=None)
+@given(_gvec, st.integers(1, 8))
+def test_st_estimator_unbiased(g, v):
+    """E[ST(g)] = g (Eq. 5): Monte-Carlo mean approaches g."""
+    g = jnp.asarray(g, jnp.float32)
+    v = min(v, g.shape[0])
+    p = T.wangni_probabilities(g, v)
+    keys = jax.random.split(jax.random.PRNGKey(0), 400)
+    draws = jax.vmap(lambda k: T.st_estimate(g, p, k))(keys)
+    mc = jnp.mean(draws, axis=0)
+    scale = float(jnp.max(jnp.abs(g))) + 1.0
+    assert float(jnp.max(jnp.abs(mc - g))) < 0.6 * scale
+
+
+@settings(max_examples=50, deadline=None)
+@given(_gvec, st.integers(1, 16))
+def test_probabilities_valid(g, v):
+    g = jnp.asarray(g, jnp.float32)
+    v = min(v, g.shape[0])
+    p = T.wangni_probabilities(g, v)
+    assert float(p.min()) > 0.0 and float(p.max()) <= 1.0
+    # the v coords with p=1 have |g| >= every non-kept coord's |g|
+    # (tie-robust: argsort tie order may differ between np and jnp)
+    pn = np.asarray(p)
+    gn = np.abs(np.asarray(g))
+    kept = pn >= 1.0
+    assert kept.sum() >= v
+    if (~kept).any() and kept.any():
+        assert gn[kept].min() >= gn[~kept].max() - 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(_gvec, st.integers(1, 8), st.floats(0.1, 1.0))
+def test_eq9_sparsity_bound(g, v, rho):
+    """E||ST(g)||_0 <= (1 + rho) v (Eq. 9)."""
+    g = jnp.asarray(g, jnp.float32)
+    v = min(v, g.shape[0])
+    sparsity, bound = T.check_convergence_condition(g, v, rho)
+    assert float(sparsity) <= float(bound) + 1e-4
+
+
+@settings(max_examples=50, deadline=None)
+@given(_gvec, st.integers(1, 8))
+def test_keeping_more_top_coords_reduces_variance(g, v):
+    """Monotonicity: larger v (more p=1 coords) => smaller 2nd moment."""
+    g = jnp.asarray(g, jnp.float32)
+    v = min(v, g.shape[0] - 1)
+    p1 = T.wangni_probabilities(g, v)
+    p2 = T.wangni_probabilities(g, v + 1)
+    m1 = float(T.st_second_moment(g, p1))
+    m2 = float(T.st_second_moment(g, p2))
+    assert m2 <= m1 + 1e-3 * (1 + m1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(8, 128), st.floats(0.1, 1.0), st.integers(0, 10 ** 6))
+def test_selection_respects_volume(n, vol, seed):
+    """select_masks picks round(P*n) (clipped to >=1) units per row."""
+    key = jax.random.PRNGKey(seed)
+    scores = {"u": jax.random.uniform(key, (1, n))}
+    forced = {"u": jnp.zeros((1, n), bool)}
+    masks = S.select_masks(scores, forced, jnp.asarray(vol), 0.1,
+                           jax.random.fold_in(key, 1))
+    count = int(masks["u"].sum())
+    expect = max(1, int(round(vol * n)))
+    assert abs(count - expect) <= 1, (count, expect, n, vol)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(16, 64), st.integers(0, 10 ** 6))
+def test_full_volume_selects_everything(n, seed):
+    scores = {"u": jax.random.uniform(jax.random.PRNGKey(seed), (2, n))}
+    forced = {"u": jnp.zeros((2, n), bool)}
+    masks = S.select_masks(scores, forced, jnp.asarray(1.0), 0.1,
+                           jax.random.PRNGKey(0))
+    assert float(masks["u"].min()) == 1.0
