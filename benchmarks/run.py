@@ -21,7 +21,7 @@ import numpy as np
 from repro.configs import CNNS, HeliosConfig, reduced
 from repro.data.federated import partition_iid, partition_noniid
 from repro.data.synthetic import class_gaussian_images
-from repro.federated import FLRun, make_fleet, setup_clients
+from repro.federated import BatchedFLRun, FLRun, make_fleet, setup_clients
 
 ROWS = []
 
@@ -170,6 +170,65 @@ def table_ps_ablation(model="lenet", rounds=10):
 
 
 # ---------------------------------------------------------------------------
+# batched round engine: rounds/sec, sequential vs vmapped cohorts
+# ---------------------------------------------------------------------------
+
+
+def table_batched_rounds(model="lenet", counts=(16, 64, 256), rounds=3,
+                         out_path="BENCH_batched_rounds.json"):
+    """Round throughput at simulated-population scale.
+
+    Cross-device regime: 1 local step, batch 16 per client, half the fleet
+    stragglers.  The sequential engine pays O(clients) host dispatch + eager
+    Helios state updates per round; the batched engine runs each round as
+    one jitted vmapped program.  Results land in ``BENCH_batched_rounds.json``.
+    """
+    import json
+
+    cfg = reduced(CNNS[model])
+    noise = _NOISE.get(model, 4.0)
+    imgs, labels = class_gaussian_images(
+        2000, cfg.image_size, cfg.in_channels, cfg.num_classes, seed=0,
+        noise=noise)
+    ti, tl = class_gaussian_images(
+        256, cfg.image_size, cfg.in_channels, cfg.num_classes, seed=99,
+        noise=noise)
+    hcfg = HeliosConfig()
+    results = []
+    for n in counts:
+        parts = partition_iid(len(labels), n, seed=0)
+        row = {"clients": n}
+        for name, cls in (("sequential", FLRun), ("batched", BatchedFLRun)):
+            clients = setup_clients(make_fleet(n - n // 2, n // 2), parts,
+                                    hcfg)
+            run = cls(cfg, hcfg, "helios", clients, imgs, labels, ti, tl,
+                      local_steps=1, batch_size=16, lr=0.05, seed=0)
+            run.run_sync(1, eval_every=0)                 # compile warmup
+            jax.block_until_ready(run.global_params)
+            t0 = time.perf_counter()
+            run.run_sync(rounds, eval_every=0)            # no eval in window
+            jax.block_until_ready(run.global_params)
+            dt = time.perf_counter() - t0
+            row[name] = {"rounds_per_sec": rounds / dt,
+                         "sec_per_round": dt / rounds}
+        row["speedup"] = (row["batched"]["rounds_per_sec"]
+                          / row["sequential"]["rounds_per_sec"])
+        emit(f"batched_rounds/{model}/{n}clients/sequential",
+             row["sequential"]["sec_per_round"] * 1e6,
+             f"rounds_per_sec={row['sequential']['rounds_per_sec']:.3f}")
+        emit(f"batched_rounds/{model}/{n}clients/batched",
+             row["batched"]["sec_per_round"] * 1e6,
+             f"rounds_per_sec={row['batched']['rounds_per_sec']:.3f};"
+             f"speedup_vs_sequential={row['speedup']:.2f}x")
+        results.append(row)
+    with open(out_path, "w") as f:
+        json.dump({"model": model, "rounds": rounds, "local_steps": 1,
+                   "batch_size": 16, "scheme": "helios",
+                   "results": results}, f, indent=2)
+    print(f"wrote {out_path}")
+
+
+# ---------------------------------------------------------------------------
 # kernels: wall time + oracle error (CPU interpret)
 # ---------------------------------------------------------------------------
 
@@ -244,6 +303,7 @@ TABLES = {
     "fig6": table_aggregation_opt,
     "fig7": table_noniid,
     "ablation": table_ps_ablation,
+    "batched": table_batched_rounds,
     "kernels": bench_kernels,
     "softtrain": bench_softtrain_flops,
 }
@@ -263,6 +323,8 @@ def main() -> None:
             fn(models=("lenet",), rounds=6)
         elif args.quick and name in ("speedup", "fig6", "fig7"):
             fn(rounds=6)
+        elif args.quick and name == "batched":
+            fn(counts=(16, 64), rounds=2)
         else:
             fn()
     print(f"\n{len(ROWS)} rows")

@@ -1,24 +1,76 @@
-"""Fault-tolerant checkpointing: atomic msgpack+zstd snapshots, keep-N GC.
+"""Fault-tolerant checkpointing: atomic msgpack snapshots, keep-N GC.
 
 Any pytree of arrays (train state, FL server state including Helios masks and
 skip counters, optimizer moments) round-trips.  Writes go to a temp file then
 ``os.replace`` (atomic on POSIX) so a crash mid-write never corrupts the
 latest checkpoint; restart picks up the newest complete step.
+
+Compression: ``zstandard`` when available, stdlib ``zlib`` otherwise.  Files
+carry a 5-byte header (magic + codec flag) so either build reads the other's
+checkpoints; headerless files are legacy raw-zstd frames.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import zlib
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+    _HAVE_ZSTD = True
+except ImportError:                       # optional dep: fall back to zlib
+    zstandard = None
+    _HAVE_ZSTD = False
 
 _KEY_RE = re.compile(r"^ckpt_(\d+)\.msgpack\.zst$")
+
+#: header = magic + 1-byte codec flag; the flag (not the filename) is
+#: authoritative for how the payload is compressed.
+_MAGIC = b"HCKP"
+_CODEC_ZSTD = b"z"
+_CODEC_ZLIB = b"d"
+
+
+def _compress(payload: bytes) -> bytes:
+    if _HAVE_ZSTD:
+        return _MAGIC + _CODEC_ZSTD + \
+            zstandard.ZstdCompressor(level=3).compress(payload)
+    return _MAGIC + _CODEC_ZLIB + zlib.compress(payload, 6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:len(_MAGIC)] == _MAGIC:
+        codec = blob[len(_MAGIC):len(_MAGIC) + 1]
+        data = blob[len(_MAGIC) + 1:]
+        if codec == _CODEC_ZLIB:
+            # same decompression-bomb cap as the zstd path
+            d = zlib.decompressobj()
+            out = d.decompress(data, 1 << 34)
+            if d.unconsumed_tail:
+                raise ValueError(
+                    "checkpoint payload exceeds the 16 GiB decompression cap")
+            return out
+        if codec == _CODEC_ZSTD:
+            if not _HAVE_ZSTD:
+                raise RuntimeError(
+                    "checkpoint was written with zstandard, which is not "
+                    "installed; install the 'zstd' extra to read it")
+            return zstandard.ZstdDecompressor().decompress(
+                data, max_output_size=1 << 34)
+        raise ValueError(f"unknown checkpoint codec flag {codec!r}")
+    # legacy format: headerless raw zstd frame
+    if not _HAVE_ZSTD:
+        raise RuntimeError(
+            "legacy zstd checkpoint requires the zstandard package")
+    return zstandard.ZstdDecompressor().decompress(blob,
+                                                   max_output_size=1 << 34)
 
 
 def _flatten(tree, path=()):
@@ -51,7 +103,7 @@ def save(directory: str, step: int, tree: Any, keep: int = 3,
     flat = {k: _pack_leaf(v) for k, v in _flatten(jax.device_get(tree)).items()}
     payload = msgpack.packb({"step": step, "leaves": flat,
                              "metadata": json.dumps(metadata or {})})
-    comp = zstandard.ZstdCompressor(level=3).compress(payload)
+    comp = _compress(payload)
     final = os.path.join(directory, f"ckpt_{step}.msgpack.zst")
     tmp = final + ".tmp"
     with open(tmp, "wb") as f:
@@ -81,8 +133,8 @@ def restore(directory: str, target: Any, step: Optional[int] = None):
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {directory}")
     path = os.path.join(directory, f"ckpt_{step}.msgpack.zst")
-    raw = zstandard.ZstdDecompressor().decompress(
-        open(path, "rb").read(), max_output_size=1 << 34)
+    with open(path, "rb") as f:
+        raw = _decompress(f.read())
     obj = msgpack.unpackb(raw)
     flat = {k: _unpack_leaf(v) for k, v in obj["leaves"].items()}
 
@@ -109,8 +161,8 @@ def metadata(directory: str, step: Optional[int] = None) -> dict:
     if step is None:
         step = latest_step(directory)
     path = os.path.join(directory, f"ckpt_{step}.msgpack.zst")
-    raw = zstandard.ZstdDecompressor().decompress(
-        open(path, "rb").read(), max_output_size=1 << 34)
+    with open(path, "rb") as f:
+        raw = _decompress(f.read())
     return json.loads(msgpack.unpackb(raw)["metadata"])
 
 

@@ -113,3 +113,14 @@ def selected_fraction(unit_masks: Dict[str, jax.Array]) -> jax.Array:
     tot = sum(m.size for m in unit_masks.values())
     sel = sum(jnp.sum(m) for m in unit_masks.values())
     return sel / max(tot, 1)
+
+
+def cnn_expand_masks_batch(unit_masks: Dict[str, jax.Array], params_tree):
+    """``cnn_expand_masks`` over a stacked cohort.
+
+    unit_masks leaves carry a leading client axis (C, L, n); params_tree is
+    the UNstacked global template.  Returns a params-shaped mask tree whose
+    leaves are (C,) + param.shape, ready for the stacked masked-mean
+    aggregation.
+    """
+    return jax.vmap(lambda um: cnn_expand_masks(um, params_tree))(unit_masks)

@@ -50,7 +50,9 @@ def select_masks(scores: Dict[str, jax.Array],
     """Eq. 2 across all unit types.  scores/forced: {key: (L, n)}.
 
     ``volume`` is the client's P (scalar in (0, 1], traced).  Returns masks
-    {key: (L, n) float 0/1} with ~P*n ones per row.
+    {key: (L, n) float 0/1} with ~P*n ones per row.  Traced counts plus the
+    explicit key argument make this directly vmap-able over a stacked client
+    cohort (federated.runtime.BatchedFLRun vmaps the whole cycle).
     """
     out = {}
     for i, (k, u) in enumerate(sorted(scores.items())):

@@ -9,10 +9,16 @@ One Helios client's per-cycle flow:
                 C_s    = 0 where trained else +1
 
 The state is a plain dict pytree (jit-able, checkpointable).
+
+All transforms are vmap-safe (no Python branching on traced values; the PRNG
+key lives inside the state so per-client splitting vectorizes), so a whole
+cohort of clients can be stacked along a leading axis (``stack_states``) and
+``begin_cycle``/``end_cycle`` vmapped inside one jitted round program
+(federated.runtime.BatchedFLRun).
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -83,3 +89,23 @@ def grad_scores(grads, axes_tree, schema, family: str = "lm"):
 
 def set_volume(state: dict, volume: float) -> dict:
     return {**state, "volume": jnp.asarray(volume, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# batched (stacked-client) state
+# ---------------------------------------------------------------------------
+
+
+def stack_states(states: Sequence[dict]) -> dict:
+    """Stack per-client states into one pytree with a leading client axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unstack_states(stacked: dict, n: int) -> List[dict]:
+    """Inverse of ``stack_states``: n per-client state dicts."""
+    return [jax.tree.map(lambda x: x[i], stacked) for i in range(n)]
+
+
+def set_volumes(stacked: dict, volumes: Sequence[float]) -> dict:
+    """Write the (C,) volume leaf of a stacked state."""
+    return {**stacked, "volume": jnp.asarray(volumes, jnp.float32)}

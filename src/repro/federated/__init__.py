@@ -1,6 +1,7 @@
 from repro.federated.heterogeneity import (CAPABLE, TABLE_I, SimClock,
                                            cycle_time, make_fleet)
-from repro.federated.runtime import Client, FLRun, setup_clients
+from repro.federated.runtime import (BatchedFLRun, Client, FLRun,
+                                     setup_clients)
 
-__all__ = ["FLRun", "Client", "setup_clients", "make_fleet", "cycle_time",
-           "SimClock", "TABLE_I", "CAPABLE"]
+__all__ = ["FLRun", "BatchedFLRun", "Client", "setup_clients", "make_fleet",
+           "cycle_time", "SimClock", "TABLE_I", "CAPABLE"]

@@ -14,6 +14,19 @@ Time is simulated (heterogeneity.cycle_time); accuracy is real (models train
 on real arrays).  The sync engines are also the reference semantics for the
 datacenter pjit path (launch/train.py), which fuses the same round into one
 compiled program.
+
+Two sync engines share those semantics:
+
+* :class:`FLRun` — the sequential reference: a Python loop re-dispatching
+  ``_local_train`` per client.  Simple, but the host loop caps the simulated
+  population size.
+* :class:`BatchedFLRun` — the batched engine: per-client Helios state is
+  stacked into one pytree with a leading client axis and the WHOLE round
+  (begin_cycle -> masked local training -> cycle_scores/end_cycle ->
+  aggregation) runs as one jitted program, vmapped over each cohort
+  (soft-training stragglers vs. full-model capable clients, so mask
+  selection stays uniform within a vmapped batch).  Same seed => same
+  trajectory as FLRun up to batched-reduction float error.
 """
 from __future__ import annotations
 
@@ -35,6 +48,56 @@ from repro.federated.heterogeneity import SimClock, cycle_time
 from repro.models import build, init_params, logical_axes
 from repro.models.cnn import cnn_accuracy
 from repro.optim import apply_updates, make_optimizer
+
+
+def _make_local_train(api, cfg: ModelConfig, opt):
+    """E masked local SGD steps under lax.scan — the one training loop both
+    engines share (sequential jits it directly; batched vmaps it per cohort,
+    which keeps the two engines numerically in lock-step)."""
+
+    def local_train(params, batch_imgs, batch_labels, masks):
+        opt_state = opt.init(params)
+
+        def step(carry, b):
+            p, s = carry
+            imgs, labs = b
+
+            def loss_fn(pp):
+                return api.loss_fn(pp, {"images": imgs, "labels": labs},
+                                   cfg, None, masks)
+
+            loss, grads = jax.value_and_grad(loss_fn)(p)
+            updates, s = opt.update(grads, s, p, 0)
+            return (apply_updates(p, updates), s), loss
+
+        (params, _), losses = jax.lax.scan(step, (params, opt_state),
+                                           (batch_imgs, batch_labels))
+        return params, losses.mean()
+
+    return local_train
+
+
+def _random_hcfg(hcfg: HeliosConfig) -> HeliosConfig:
+    """Caldas et al. [12] baseline: pure random selection, no top-k /
+    rotation.  Shared by both engines so the baseline stays one definition."""
+    return dataclasses.replace(hcfg, p_s=0.0, rotation_threshold_auto=False,
+                               rotation_threshold=10 ** 9)
+
+
+def _median_pace(capable_times: Sequence[float]) -> float:
+    """Median capable-device cycle time, 1.0 for an all-straggler cohort.
+
+    The explicit empty guard matters: ``np.median([])`` is NaN, and NaN is
+    truthy, so ``float(np.median([...])) or 1.0`` silently kept NaN and
+    poisoned the volume controller.
+    """
+    return float(np.median(capable_times)) if capable_times else 1.0
+
+
+def _collab_pace(clients: Sequence["Client"]) -> float:
+    """§IV.C collaboration pace over a client list."""
+    return _median_pace([cycle_time(c.profile, 1.0) for c in clients
+                         if not c.is_straggler])
 
 
 @dataclasses.dataclass
@@ -85,29 +148,9 @@ class FLRun:
                                            volume=c.volume, seed=c.cid)
 
     def _jit(self):
-        cfg, api = self.cfg, self.api
-
-        def local_train(params, batch_imgs, batch_labels, masks):
-            opt_state = self.opt.init(params)
-
-            def step(carry, b):
-                p, s = carry
-                imgs, labs = b
-
-                def loss_fn(p):
-                    return api.loss_fn(p, {"images": imgs, "labels": labs},
-                                       cfg, None, masks)
-
-                loss, grads = jax.value_and_grad(loss_fn)(p)
-                updates, s = self.opt.update(grads, s, p, 0)
-                p = apply_updates(p, updates)
-                return (p, s), loss
-
-            (params, _), losses = jax.lax.scan(step, (params, opt_state),
-                                               (batch_imgs, batch_labels))
-            return params, losses.mean()
-
-        self._local_train = jax.jit(local_train)
+        cfg = self.cfg
+        self._local_train = jax.jit(_make_local_train(self.api, cfg,
+                                                      self.opt))
         self._eval = jax.jit(lambda p, x, y: cnn_accuracy(p, x, y, cfg))
 
     # ------------------------------------------------------------------
@@ -127,10 +170,7 @@ class FLRun:
         """One local training cycle; returns (new_params, masks, ratio)."""
         hcfg = self.hcfg
         if self.scheme == "random" and client.is_straggler:
-            # Caldas et al.: pure random selection, no top-k / rotation
-            hcfg = dataclasses.replace(self.hcfg, p_s=0.0,
-                                       rotation_threshold_auto=False,
-                                       rotation_threshold=10 ** 9)
+            hcfg = _random_hcfg(self.hcfg)
         if self.scheme in ("helios", "st_only", "random") and client.is_straggler:
             client.helios_state = ST.begin_cycle(client.helios_state, hcfg)
         masks = self._client_masks(client)
@@ -175,19 +215,31 @@ class FLRun:
     # ------------------------------------------------------------------
     # engines
     # ------------------------------------------------------------------
+    def _round_times(self) -> List[float]:
+        """Simulated wall time per client for one round (current volumes)."""
+        return [cycle_time(c.profile,
+                           c.volume if (self.scheme != "syn" and
+                                        c.is_straggler) else 1.0)
+                for c in self.clients]
+
+    def _record_round(self, r: int, rounds: int, eval_every: int,
+                      clock: float, loss: float, ratios: List[float]):
+        """History bookkeeping shared by both sync engines; eval_every=0
+        disables evaluation/history entirely (pure-throughput benchmarks)."""
+        if eval_every > 0 and (r % eval_every == 0 or r == rounds - 1):
+            self.history.append({
+                "scheme": self.scheme, "cycle": r + 1, "time": clock,
+                "acc": self.evaluate(), "loss": loss, "ratios": ratios,
+                "volumes": [c.volume for c in self.clients]})
+
     def run_sync(self, rounds: int, eval_every: int = 1) -> List[dict]:
         """helios / st_only / random / syn."""
-        pace = float(np.median([cycle_time(c.profile, 1.0)
-                                for c in self.clients
-                                if not c.is_straggler])) or 1.0
+        pace = _collab_pace(self.clients)
         clock = 0.0
         for r in range(rounds):
-            results, times = [], []
-            for c in self.clients:
-                vol = c.volume if (self.scheme != "syn" and c.is_straggler) \
-                    else 1.0
-                t = cycle_time(c.profile, vol)
-                times.append(t)
+            results = []
+            times = self._round_times()
+            for c, t in zip(self.clients, times):
                 results.append(self._client_cycle(c, self.global_params))
                 # volume adaptation toward the collaboration pace (§IV.C)
                 if self.scheme == "helios" and c.is_straggler and \
@@ -199,12 +251,9 @@ class FLRun:
             self._aggregate(results)
             clock += max(times)
             self.round += 1
-            if r % eval_every == 0 or r == rounds - 1:
-                self.history.append({
-                    "scheme": self.scheme, "cycle": r + 1, "time": clock,
-                    "acc": self.evaluate(),
-                    "loss": float(np.mean([x[3] for x in results])),
-                    "volumes": [c.volume for c in self.clients]})
+            self._record_round(r, rounds, eval_every, clock,
+                               float(np.mean([x[3] for x in results])),
+                               [float(x[2]) for x in results])
         return self.history
 
     def run_async(self, capable_cycles: int, mix_weight: float = 0.5,
@@ -236,7 +285,7 @@ class FLRun:
             clock.schedule(cycle_time(c.profile, 1.0), cid)
             if not c.is_straggler:
                 done_fast += 1
-                if done_fast % eval_every == 0:
+                if eval_every > 0 and done_fast % eval_every == 0:
                     self.history.append({
                         "scheme": self.scheme, "cycle": done_fast,
                         "time": clock.now, "acc": self.evaluate(),
@@ -262,9 +311,7 @@ class FLRun:
             times, stragglers = identify_time_based(
                 lambda d: None, len(sim), simulated_times=sim)
             is_straggler = len(self.clients) in stragglers
-        pace = float(np.median([cycle_time(c.profile, 1.0)
-                                for c in self.clients if not c.is_straggler])
-                     or [1.0])
+        pace = _collab_pace(self.clients)
         vol = VOL.volume_from_profile(cycle_time(profile, 1.0), pace,
                                       self.hcfg.min_volume) \
             if is_straggler else 1.0
@@ -277,6 +324,190 @@ class FLRun:
 
     def remove_client(self, cid: int) -> None:
         self.clients = [c for c in self.clients if c.cid != cid]
+
+
+class BatchedFLRun(FLRun):
+    """Batched round engine: one jitted vmapped program per round.
+
+    Per-client Helios soft-training state (masks, scores, skip_counts,
+    volume, rng, cycle) is stacked along a leading client axis.  Clients are
+    split into two COHORTS so every control decision inside the traced
+    program is uniform:
+
+      * soft-training stragglers — begin_cycle (batched PRNG split + Eq. 2
+        selection) -> masked local training (lax.scan over steps) ->
+        cycle_scores / end_cycle, all under one vmap;
+      * capable clients — full-model local training under a second vmap.
+
+    Both cohorts and the Eq. 10 / masked-mean aggregation trace into a
+    SINGLE compiled round program, so host-loop dispatch overhead is O(1)
+    per round instead of O(clients).  Host-side pieces stay host-side, in
+    the same order as the sequential reference: batch sampling consumes
+    ``self.rng`` client-by-client and the §IV.C volume controller runs on
+    simulated wall times — which keeps the two engines trajectory-equivalent
+    for a fixed seed (up to batched-reduction float error).
+
+    The async schemes (asyn / afo) are inherently event-driven and fall back
+    to the sequential engine.
+    """
+
+    def __post_init__(self):
+        super().__post_init__()
+        self._build_batched()
+
+    # ------------------------------------------------------------------
+    def _build_batched(self):
+        soft = self.scheme in ("helios", "st_only", "random")
+        self._s_idx = [i for i, c in enumerate(self.clients)
+                       if soft and c.is_straggler]
+        self._c_idx = [i for i, c in enumerate(self.clients)
+                       if not (soft and c.is_straggler)]
+        # stacked[unperm] restores original client order for aggregation
+        self._unperm = jnp.asarray(
+            np.argsort(np.asarray(self._s_idx + self._c_idx)), jnp.int32)
+        self._sstate = ST.stack_states(
+            [self.clients[i].helios_state for i in self._s_idx]) \
+            if self._s_idx else None
+        # one compiled program per cohort shape; unperm is a traced arg, so
+        # elastic churn returning to a seen (n_s, n_c) pays no recompile
+        if not hasattr(self, "_round_cache"):
+            self._round_cache = {}
+        key = (len(self._s_idx), len(self._c_idx))
+        if key not in self._round_cache:
+            self._round_cache[key] = jax.jit(self._make_round_fn(*key))
+        self._round_fn = self._round_cache[key]
+
+    def _make_round_fn(self, n_s: int, n_c: int):
+        cfg, api, axes, opt = self.cfg, self.api, self.axes, self.opt
+        hcfg, scheme = self.hcfg, self.scheme
+        schema = api.mask_schema
+        hcfg_eff = _random_hcfg(hcfg) if scheme == "random" else hcfg
+        agg_mode = hcfg.aggregation if scheme == "helios" else "uniform"
+        ones_masks = {k: jnp.ones(s, jnp.float32) for k, s in schema.items()}
+        local_train = _make_local_train(api, cfg, opt)
+
+        def round_fn(global_params, sstate, s_imgs, s_labs, c_imgs, c_labs,
+                     unperm):
+            def cat(parts):
+                if len(parts) == 1:
+                    return jax.tree.map(
+                        lambda x: jnp.take(x, unperm, axis=0), parts[0])
+                return jax.tree.map(
+                    lambda *xs: jnp.take(jnp.concatenate(xs), unperm,
+                                         axis=0), *parts)
+
+            parts_p, parts_r, parts_l, parts_m = [], [], [], []
+            new_sstate = sstate
+            if n_s:
+                def one_straggler(st, im, lb):
+                    st = ST.begin_cycle(st, hcfg_eff)
+                    masks = st["masks"]
+                    p, loss = local_train(global_params, im, lb, masks)
+                    if scheme in ("helios", "st_only"):
+                        scores = ST.cycle_scores(p, global_params, axes,
+                                                 schema, family="cnn")
+                        st = ST.end_cycle(st, scores, hcfg)
+                    else:                                  # random [12]
+                        st = ST.end_cycle(st, st["scores"], hcfg_eff)
+                    return (p, st, MK.selected_fraction(masks), loss, masks)
+
+                p, new_sstate, r, l, m = jax.vmap(one_straggler)(
+                    sstate, s_imgs, s_labs)
+                parts_p.append(p), parts_r.append(r), parts_l.append(l)
+                parts_m.append(m)
+            if n_c:
+                def one_capable(im, lb):
+                    return local_train(global_params, im, lb, ones_masks)
+
+                p, l = jax.vmap(one_capable)(c_imgs, c_labs)
+                parts_p.append(p)
+                parts_r.append(jnp.ones((n_c,), jnp.float32))
+                parts_l.append(l)
+                parts_m.append(jax.tree.map(
+                    lambda v: jnp.ones((n_c,) + v.shape, jnp.float32),
+                    ones_masks))
+            stacked = cat(parts_p)
+            ratios = cat(parts_r)
+            losses = cat(parts_l)
+            pmasks = MK.cnn_expand_masks_batch(cat(parts_m), global_params) \
+                if agg_mode == "masked_mean" else None
+            new_global = AG.aggregate_stacked(agg_mode, global_params,
+                                              stacked, ratios, pmasks)
+            return new_global, new_sstate, ratios, losses
+
+        return round_fn
+
+    # ------------------------------------------------------------------
+    def _sample_cohort_batches(self):
+        # consume self.rng in CLIENT order — bit-identical draws to the
+        # sequential engine's per-client loop
+        per = [self._sample_batches(c) for c in self.clients]
+
+        def stack(idx):
+            if not idx:
+                return None, None
+            return (jnp.stack([per[i][0] for i in idx]),
+                    jnp.stack([per[i][1] for i in idx]))
+
+        return stack(self._s_idx), stack(self._c_idx)
+
+    def run_sync(self, rounds: int, eval_every: int = 1) -> List[dict]:
+        pace = _collab_pace(self.clients)
+        clock = 0.0
+        for r in range(rounds):
+            times = self._round_times()
+            (s_imgs, s_labs), (c_imgs, c_labs) = self._sample_cohort_batches()
+            self.global_params, self._sstate, ratios, losses = \
+                self._round_fn(self.global_params, self._sstate,
+                               s_imgs, s_labs, c_imgs, c_labs, self._unperm)
+            if self.scheme == "helios" and self.hcfg.adapt_volume and \
+                    self._s_idx:
+                vols = []
+                for i in self._s_idx:
+                    c = self.clients[i]
+                    c.volume = VOL.adapt_volume(c.volume, times[i], pace,
+                                                self.hcfg.adapt_gain,
+                                                self.hcfg.min_volume)
+                    vols.append(c.volume)
+                self._sstate = ST.set_volumes(self._sstate, vols)
+            clock += max(times)
+            self.round += 1
+            self._record_round(r, rounds, eval_every, clock,
+                               float(jnp.mean(losses)),
+                               np.asarray(ratios).astype(float).tolist())
+        # keep per-client helios_state fresh so callers that snapshot
+        # clients (checkpointing, inspection) never see round-0 state
+        self.sync_client_states()
+        return self.history
+
+    # ------------------------------------------------------------------
+    def sync_client_states(self) -> None:
+        """Write the stacked cohort state back into per-client
+        ``helios_state`` (for checkpointing / inspection / elastic ops)."""
+        if self._s_idx and self._sstate is not None:
+            for i, st in zip(self._s_idx,
+                             ST.unstack_states(self._sstate,
+                                               len(self._s_idx))):
+                self.clients[i].helios_state = st
+
+    def run_async(self, *args, **kwargs) -> List[dict]:
+        # event-driven: no fixed cohort to batch — sequential fallback
+        self.sync_client_states()
+        hist = super().run_async(*args, **kwargs)
+        self._build_batched()
+        return hist
+
+    def add_client(self, profile: DeviceProfile, data_idx: np.ndarray,
+                   white_box: bool = True) -> Client:
+        self.sync_client_states()
+        c = super().add_client(profile, data_idx, white_box)
+        self._build_batched()                 # cohort shapes changed: re-jit
+        return c
+
+    def remove_client(self, cid: int) -> None:
+        self.sync_client_states()
+        super().remove_client(cid)
+        self._build_batched()
 
 
 def setup_clients(profiles: Sequence[DeviceProfile],
@@ -292,8 +523,8 @@ def setup_clients(profiles: Sequence[DeviceProfile],
     else:
         _, stragglers = identify_time_based(lambda d: None, n,
                                             simulated_times=sim_times)
-    pace = float(np.median([t for i, t in enumerate(sim_times)
-                            if i not in stragglers]) or 1.0)
+    pace = _median_pace([t for i, t in enumerate(sim_times)
+                         if i not in stragglers])
     clients = []
     for i, p in enumerate(profiles):
         is_s = i in stragglers

@@ -1,0 +1,146 @@
+"""Batched round engine: equivalence against the sequential reference,
+checkpointing through the stacked state, and the all-straggler pace guard.
+
+The batched engine must be a pure data-layout change: for a fixed seed it
+replays the sequential engine's trajectory (same batches, same PRNG-driven
+mask selection, same volume adaptation) up to batched-reduction float error.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.checkpoint.checkpoint as CKPT
+from repro.checkpoint import restore, save
+from repro.configs import CNNS, HeliosConfig, reduced
+from repro.core import soft_train as ST
+from repro.data.federated import partition_noniid
+from repro.data.synthetic import class_gaussian_images
+from repro.federated import (BatchedFLRun, FLRun, TABLE_I, Client,
+                             make_fleet, setup_clients)
+
+
+@pytest.fixture(scope="module")
+def setting():
+    cfg = reduced(CNNS["lenet"])
+    imgs, labels = class_gaussian_images(1200, cfg.image_size,
+                                         cfg.in_channels, cfg.num_classes,
+                                         seed=0)
+    ti, tl = class_gaussian_images(256, cfg.image_size, cfg.in_channels,
+                                   cfg.num_classes, seed=9)
+    parts = partition_noniid(labels, 4, shards_per_client=4)
+    return cfg, imgs, labels, ti, tl, parts
+
+
+def _make(setting, cls, scheme, hcfg=None, **kw):
+    cfg, imgs, labels, ti, tl, parts = setting
+    hcfg = hcfg or HeliosConfig()
+    clients = setup_clients(make_fleet(2, 2), parts, hcfg)
+    return cls(cfg, hcfg, scheme, clients, imgs, labels, ti, tl,
+               local_steps=2, lr=0.1, seed=0, **kw)
+
+
+def _max_param_diff(a, b):
+    return max(float(np.max(np.abs(np.asarray(x, np.float32)
+                                   - np.asarray(y, np.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.mark.parametrize("scheme", ["helios", "syn", "st_only", "random"])
+def test_batched_matches_sequential(setting, scheme):
+    """Fixed seed, 3 rounds: same global params (atol 1e-5), same per-round
+    straggler selected fractions, same adapted volumes."""
+    seq = _make(setting, FLRun, scheme)
+    bat = _make(setting, BatchedFLRun, scheme)
+    hs = seq.run_sync(3)
+    hb = bat.run_sync(3)
+    assert _max_param_diff(seq.global_params, bat.global_params) < 1e-5
+    for he, hbb in zip(hs, hb):
+        np.testing.assert_allclose(he["ratios"], hbb["ratios"], atol=1e-6)
+        np.testing.assert_allclose(he["volumes"], hbb["volumes"], atol=1e-6)
+        assert abs(he["time"] - hbb["time"]) < 1e-9
+
+
+def test_batched_masked_mean_aggregation(setting):
+    """The stacked per-coordinate masked mean matches the list-of-pytrees
+    reference path."""
+    hcfg = HeliosConfig(aggregation="masked_mean")
+    seq = _make(setting, FLRun, "helios", hcfg=hcfg)
+    bat = _make(setting, BatchedFLRun, "helios", hcfg=hcfg)
+    seq.run_sync(2)
+    bat.run_sync(2)
+    assert _max_param_diff(seq.global_params, bat.global_params) < 1e-5
+
+
+def test_batched_state_sync_and_elastic(setting):
+    """Stacked state writes back to clients; add/remove re-jits cohorts."""
+    cfg, *_, parts = setting
+    bat = _make(setting, BatchedFLRun, "helios")
+    bat.run_sync(2)
+    bat.sync_client_states()
+    for c in bat.clients:
+        if c.is_straggler:
+            assert int(c.helios_state["cycle"]) == 2
+            fracs = [float(m.mean()) for m in c.helios_state["masks"].values()]
+            assert min(fracs) < 0.9                       # compressed
+    n0 = len(bat.clients)
+    new = bat.add_client(TABLE_I[0], parts[0])
+    assert new.is_straggler and len(bat.clients) == n0 + 1
+    bat.run_sync(1)
+    bat.remove_client(new.cid)
+    assert len(bat.clients) == n0
+    bat.run_sync(1)                                       # still trains
+
+
+def test_all_straggler_pace_is_finite(setting):
+    """Regression: an all-straggler cohort used to propagate a NaN
+    collaboration pace (truthy NaN median) into volume adaptation."""
+    cfg, imgs, labels, ti, tl, parts = setting
+    hcfg = HeliosConfig()
+    clients = [Client(cid=i, profile=TABLE_I[i % len(TABLE_I)],
+                      data_idx=parts[i % len(parts)], volume=0.5,
+                      is_straggler=True) for i in range(2)]
+    run = FLRun(cfg, hcfg, "helios", clients, imgs, labels, ti, tl,
+                local_steps=1, lr=0.1, seed=0)
+    hist = run.run_sync(2)
+    for c in run.clients:
+        assert np.isfinite(c.volume)
+        assert hcfg.min_volume <= c.volume <= 1.0
+    assert np.isfinite(hist[-1]["time"])
+
+
+def test_checkpoint_zlib_fallback_roundtrip(setting, tmp_path, monkeypatch):
+    """FL state survives save/restore through the no-zstandard path, and the
+    file header records the zlib codec flag."""
+    monkeypatch.setattr(CKPT, "_HAVE_ZSTD", False)
+    bat = _make(setting, BatchedFLRun, "helios")
+    bat.run_sync(1)
+    bat.sync_client_states()
+    state = {"global": bat.global_params,
+             "helios": [c.helios_state for c in bat.clients]}
+    path = save(str(tmp_path), 7, state, metadata={"engine": "batched"})
+    with open(path, "rb") as f:
+        head = f.read(5)
+    assert head == CKPT._MAGIC + CKPT._CODEC_ZLIB
+    restored, step = restore(str(tmp_path), state)
+    assert step == 7
+    assert _max_param_diff(state["global"], restored["global"]) == 0.0
+    for a, b in zip(jax.tree.leaves(state["helios"]),
+                    jax.tree.leaves(restored["helios"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_stack_unstack_roundtrip():
+    schema = {"conv0": (1, 6), "fc0": (1, 12)}
+    states = [ST.init_state(schema, volume=0.5 + 0.1 * i, seed=i)
+              for i in range(3)]
+    stacked = ST.stack_states(states)
+    assert stacked["volume"].shape == (3,)
+    back = ST.unstack_states(stacked, 3)
+    for orig, rt in zip(states, back):
+        for a, b in zip(jax.tree.leaves(orig), jax.tree.leaves(rt)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    restamped = ST.set_volumes(stacked, [0.2, 0.3, 0.4])
+    np.testing.assert_allclose(np.asarray(restamped["volume"]),
+                               [0.2, 0.3, 0.4])

@@ -3,7 +3,11 @@ system's selection invariants."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency: property tests need it")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import selection as S
 from repro.core import theory as T
