@@ -59,7 +59,9 @@ def _run_scheme(world, scheme, n_capable, n_straggler, rounds, lr=0.02,
     cfg, imgs, labels, ti, tl, parts = world
     hcfg = hcfg or HeliosConfig()
     clients = setup_clients(make_fleet(n_capable, n_straggler), parts, hcfg)
-    run = FLRun(cfg, hcfg, scheme, clients, imgs, labels, ti, tl,
+    run = FLRun(cfg, hcfg, scheme, clients,
+                {"images": imgs, "labels": labels},
+                {"images": ti, "labels": tl},
                 local_steps=2, lr=lr, seed=seed)
     if scheme in ("syn", "helios", "st_only", "random"):
         hist = run.run_sync(rounds)
@@ -174,6 +176,44 @@ def table_ps_ablation(model="lenet", rounds=10):
 # ---------------------------------------------------------------------------
 
 
+def _engine_throughput(tag, cfg, hcfg, train_data, test_data, parts_for,
+                       counts, rounds, **run_kw):
+    """Sequential-vs-batched rounds/sec over population sizes ``counts``.
+
+    Shared by the CNN and LM throughput tables: warmup round (compile),
+    timed eval-free window, per-count speedup rows via ``emit``.  Half the
+    fleet are stragglers; ``parts_for(n)`` supplies the data partition.
+    """
+    results = []
+    for n in counts:
+        parts = parts_for(n)
+        row = {"clients": n}
+        for name, cls in (("sequential", FLRun), ("batched", BatchedFLRun)):
+            clients = setup_clients(make_fleet(n - n // 2, n // 2), parts,
+                                    hcfg)
+            run = cls(cfg, hcfg, "helios", clients, train_data, test_data,
+                      seed=0, **run_kw)
+            run.run_sync(1, eval_every=0)                 # compile warmup
+            jax.block_until_ready(run.global_params)
+            t0 = time.perf_counter()
+            run.run_sync(rounds, eval_every=0)            # no eval in window
+            jax.block_until_ready(run.global_params)
+            dt = time.perf_counter() - t0
+            row[name] = {"rounds_per_sec": rounds / dt,
+                         "sec_per_round": dt / rounds}
+        row["speedup"] = (row["batched"]["rounds_per_sec"]
+                          / row["sequential"]["rounds_per_sec"])
+        emit(f"{tag}/{n}clients/sequential",
+             row["sequential"]["sec_per_round"] * 1e6,
+             f"rounds_per_sec={row['sequential']['rounds_per_sec']:.3f}")
+        emit(f"{tag}/{n}clients/batched",
+             row["batched"]["sec_per_round"] * 1e6,
+             f"rounds_per_sec={row['batched']['rounds_per_sec']:.3f};"
+             f"speedup_vs_sequential={row['speedup']:.2f}x")
+        results.append(row)
+    return results
+
+
 def table_batched_rounds(model="lenet", counts=(16, 64, 256), rounds=3,
                          out_path="BENCH_batched_rounds.json"):
     """Round throughput at simulated-population scale.
@@ -193,38 +233,77 @@ def table_batched_rounds(model="lenet", counts=(16, 64, 256), rounds=3,
     ti, tl = class_gaussian_images(
         256, cfg.image_size, cfg.in_channels, cfg.num_classes, seed=99,
         noise=noise)
-    hcfg = HeliosConfig()
-    results = []
-    for n in counts:
-        parts = partition_iid(len(labels), n, seed=0)
-        row = {"clients": n}
-        for name, cls in (("sequential", FLRun), ("batched", BatchedFLRun)):
-            clients = setup_clients(make_fleet(n - n // 2, n // 2), parts,
-                                    hcfg)
-            run = cls(cfg, hcfg, "helios", clients, imgs, labels, ti, tl,
-                      local_steps=1, batch_size=16, lr=0.05, seed=0)
-            run.run_sync(1, eval_every=0)                 # compile warmup
-            jax.block_until_ready(run.global_params)
-            t0 = time.perf_counter()
-            run.run_sync(rounds, eval_every=0)            # no eval in window
-            jax.block_until_ready(run.global_params)
-            dt = time.perf_counter() - t0
-            row[name] = {"rounds_per_sec": rounds / dt,
-                         "sec_per_round": dt / rounds}
-        row["speedup"] = (row["batched"]["rounds_per_sec"]
-                          / row["sequential"]["rounds_per_sec"])
-        emit(f"batched_rounds/{model}/{n}clients/sequential",
-             row["sequential"]["sec_per_round"] * 1e6,
-             f"rounds_per_sec={row['sequential']['rounds_per_sec']:.3f}")
-        emit(f"batched_rounds/{model}/{n}clients/batched",
-             row["batched"]["sec_per_round"] * 1e6,
-             f"rounds_per_sec={row['batched']['rounds_per_sec']:.3f};"
-             f"speedup_vs_sequential={row['speedup']:.2f}x")
-        results.append(row)
+    run_kw = dict(local_steps=1, batch_size=16, lr=0.05)
+    results = _engine_throughput(
+        f"batched_rounds/{model}", cfg, HeliosConfig(),
+        {"images": imgs, "labels": labels}, {"images": ti, "labels": tl},
+        lambda n: partition_iid(len(labels), n, seed=0), counts, rounds,
+        **run_kw)
     with open(out_path, "w") as f:
-        json.dump({"model": model, "rounds": rounds, "local_steps": 1,
-                   "batch_size": 16, "scheme": "helios",
-                   "results": results}, f, indent=2)
+        json.dump({"model": model, "rounds": rounds, "scheme": "helios",
+                   **run_kw, "results": results}, f, indent=2)
+    print(f"wrote {out_path}")
+
+
+# ---------------------------------------------------------------------------
+# federated LM via the family-adapter seam: rounds/sec + CE trajectory
+# ---------------------------------------------------------------------------
+
+
+def table_federated_lm(arch="deepseek-7b", counts=(4, 8), rounds=3,
+                       ce_rounds=4, out_path="BENCH_federated_lm.json"):
+    """Federated LM round throughput, sequential vs batched engines.
+
+    A reduced dense transformer trains on Non-IID Markov-topic token
+    streams (partition_by_topic) with half the fleet stragglers; the CE
+    trajectory (helios scheme, eval on the full test set per round) shows
+    the LM actually learns through the soft-training path.  Results land in
+    ``BENCH_federated_lm.json``.
+    """
+    import json
+
+    from repro.configs import ARCHS
+    from repro.data.federated import partition_by_topic
+    from repro.data.synthetic import markov_topic_tokens
+
+    cfg = reduced(ARCHS[arch])
+    data_vocab = min(64, cfg.vocab_size)
+    tokens, topics = markov_topic_tokens(768, 48, data_vocab,
+                                         n_topics=8, seed=0)
+    test_tokens, _ = markov_topic_tokens(128, 48, data_vocab,
+                                         n_topics=8, seed=99)
+    hcfg = HeliosConfig()
+    train, test = {"tokens": tokens}, {"tokens": test_tokens}
+
+    def parts_for(n):
+        return partition_by_topic(topics, n, topics_per_client=2)
+
+    tp_kw = dict(local_steps=1, batch_size=8, lr=0.1)
+    results = _engine_throughput(f"federated_lm/{arch}", cfg, hcfg, train,
+                                 test, parts_for, counts, rounds,
+                                 eval_batch=64, **tp_kw)
+
+    # CE trajectory: fresh batched run with full-test-set eval every round
+    # (hotter hyperparameters than the throughput window — recorded as such)
+    n = counts[0]
+    ce_kw = dict(local_steps=4, batch_size=8, lr=0.5)
+    clients = setup_clients(make_fleet(n - n // 2, n // 2), parts_for(n),
+                            hcfg)
+    run = BatchedFLRun(cfg, hcfg, "helios", clients, train, test, seed=0,
+                       eval_batch=64, **ce_kw)
+    hist = run.run_sync(ce_rounds)
+    traj = [round(h["ce"], 4) for h in hist]
+    emit(f"federated_lm/{arch}/{n}clients/ce_trajectory",
+         hist[-1]["time"] / max(hist[-1]["cycle"], 1) * 1e6,
+         "ce=" + "->".join(f"{c:.2f}" for c in traj))
+    with open(out_path, "w") as f:
+        json.dump({"arch": arch, "family": cfg.family, "scheme": "helios",
+                   "data_vocab": data_vocab,
+                   "uniform_ce": float(np.log(cfg.vocab_size)),
+                   "throughput": {"rounds": rounds, **tp_kw,
+                                  "results": results},
+                   "ce": {"rounds": ce_rounds, "clients": n, **ce_kw,
+                          "trajectory": traj}}, f, indent=2)
     print(f"wrote {out_path}")
 
 
@@ -304,6 +383,7 @@ TABLES = {
     "fig7": table_noniid,
     "ablation": table_ps_ablation,
     "batched": table_batched_rounds,
+    "federated_lm": table_federated_lm,
     "kernels": bench_kernels,
     "softtrain": bench_softtrain_flops,
 }
@@ -325,6 +405,8 @@ def main() -> None:
             fn(rounds=6)
         elif args.quick and name == "batched":
             fn(counts=(16, 64), rounds=2)
+        elif args.quick and name == "federated_lm":
+            fn(counts=(4,), rounds=2, ce_rounds=2)
         else:
             fn()
     print(f"\n{len(ROWS)} rows")

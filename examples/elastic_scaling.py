@@ -22,7 +22,9 @@ parts = partition_noniid(labels, 6, shards_per_client=4)
 hcfg = HeliosConfig()
 
 clients = setup_clients(make_fleet(2, 2), parts[:4], hcfg)
-run = FLRun(cfg, hcfg, "helios", clients, imgs, labels, ti, tl,
+run = FLRun(cfg, hcfg, "helios", clients,
+            {"images": imgs, "labels": labels},
+            {"images": ti, "labels": tl},
             local_steps=5, lr=0.1)
 
 print("phase 1: 2 capable + 2 stragglers")

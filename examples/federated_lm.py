@@ -1,0 +1,77 @@
+"""Federated language-model training through the family-adapter seam.
+
+The same round engines that reproduce the paper's CNN testbed federate a
+small dense transformer on Non-IID token streams: clients hold documents
+from a few Markov "topics" (data.synthetic.markov_topic_tokens +
+data.federated.partition_by_topic), stragglers soft-train rotating
+sub-models, and the server tracks test cross-entropy instead of accuracy.
+This is the FLuID / FedEL scenario — sub-model training of transformer-style
+models on heterogeneous language clients — expressed with zero family
+branches inside the engines.
+
+  PYTHONPATH=src python examples/federated_lm.py --rounds 6
+  PYTHONPATH=src python examples/federated_lm.py --engine batched --clients 16
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs import ARCHS, HeliosConfig, reduced
+from repro.data.federated import label_distribution, partition_by_topic
+from repro.data.synthetic import markov_topic_tokens
+from repro.federated import BatchedFLRun, FLRun, make_fleet, setup_clients
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b",
+                    help="any token-stream family (dense/moe/ssm/hybrid); "
+                         "reduced() for CPU")
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--engine", default="sequential",
+                    choices=["sequential", "batched"])
+    ap.add_argument("--topics", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=48)
+    ap.add_argument("--data-vocab", type=int, default=64,
+                    help="token stream vocab (<= model vocab); small keeps "
+                         "CE moving within a few CPU rounds")
+    args = ap.parse_args()
+
+    runner = BatchedFLRun if args.engine == "batched" else FLRun
+    cfg = reduced(ARCHS[args.arch])
+    hcfg = HeliosConfig()
+
+    dv = min(args.data_vocab, cfg.vocab_size)
+    tokens, topics = markov_topic_tokens(96 * args.clients, args.seq, dv,
+                                         n_topics=args.topics, seed=0)
+    test_tokens, _ = markov_topic_tokens(192, args.seq, dv,
+                                         n_topics=args.topics, seed=99)
+    parts = partition_by_topic(topics, args.clients, topics_per_client=2)
+    hist = label_distribution(topics, parts, args.topics)
+    cover = (hist > 0).sum(axis=1)
+    print(f"== {args.arch} ({cfg.family}), {args.clients} clients, "
+          f"{args.topics} topics (each client covers "
+          f"{cover.min()}-{cover.max()}), engine={args.engine} ==")
+    print(f"model-uniform CE = ln({cfg.vocab_size}) = "
+          f"{np.log(cfg.vocab_size):.2f}; stream-uniform = ln({dv}) = "
+          f"{np.log(dv):.2f}; Markov floor ~= ln(8) = 2.08")
+
+    nc = args.clients - args.clients // 2
+    for scheme in ("syn", "st_only", "helios"):
+        clients = setup_clients(make_fleet(nc, args.clients // 2), parts,
+                                hcfg)
+        run = runner(cfg, hcfg, scheme, clients, {"tokens": tokens},
+                     {"tokens": test_tokens}, local_steps=4, batch_size=8,
+                     lr=0.5, seed=0, eval_batch=64)
+        hist = run.run_sync(args.rounds)
+        traj = " -> ".join(f"{h['ce']:.2f}" for h in hist)
+        print(f"{scheme:7s} | CE {traj} | sim time {hist[-1]['time']:6.1f} "
+              f"| time/cycle {hist[-1]['time'] / hist[-1]['cycle']:.2f}")
+
+    print("\nstragglers soft-train sub-models; Helios's Eq. 10 aggregation "
+          "weighs them by selected fraction — same engines, new family.")
+
+
+if __name__ == "__main__":
+    main()

@@ -52,7 +52,9 @@ def main():
               f"engine={args.engine} ==")
         for scheme in ("syn", "helios"):
             clients = setup_clients(make_fleet(nc, ns), parts, hcfg)
-            run = runner(cfg, hcfg, scheme, clients, imgs, labels, ti, tl,
+            run = runner(cfg, hcfg, scheme, clients,
+                         {"images": imgs, "labels": labels},
+                         {"images": ti, "labels": tl},
                          local_steps=1, batch_size=16, lr=0.05)
             run.run_sync(1, eval_every=0)      # untimed compile warmup
             jax.block_until_ready(run.global_params)
@@ -72,7 +74,9 @@ def main():
     results = {}
     for scheme in ("syn", "asyn", "random", "afo", "helios"):
         clients = setup_clients(make_fleet(nc, ns), parts, hcfg)
-        run = runner(cfg, hcfg, scheme, clients, imgs, labels, ti, tl,
+        run = runner(cfg, hcfg, scheme, clients,
+                     {"images": imgs, "labels": labels},
+                     {"images": ti, "labels": tl},
                      local_steps=5, lr=0.1)
         if scheme in ("syn", "helios", "random"):
             hist = run.run_sync(args.rounds)

@@ -13,13 +13,15 @@ from repro.configs import CNNS, HeliosConfig, reduced
 from repro.core import soft_train as ST
 from repro.core.volume import volume_from_profile
 from repro.data.synthetic import class_gaussian_images
+from repro.federated.adapter import make_adapter
 from repro.federated.heterogeneity import CAPABLE, TABLE_I, cycle_time
 from repro.models import build, init_params, make_full_masks
 from repro.optim import apply_updates, make_optimizer
 
-# 1. a model (the paper's LeNet testbed, reduced for CPU)
+# 1. a model (the paper's LeNet testbed, reduced for CPU) + its FL adapter
 cfg = reduced(CNNS["lenet"])
 api = build(cfg)
+adapter = make_adapter(cfg)
 params = init_params(jax.random.PRNGKey(0), cfg)
 
 # 2. identify the straggler and its optimization target (§IV)
@@ -56,8 +58,7 @@ for cycle in range(5):
         params, opt_state, loss = train_step(
             params, opt_state, state["masks"],
             jnp.asarray(imgs[idx]), jnp.asarray(labels[idx]))
-    scores = ST.cycle_scores(params, prev, None, api.mask_schema,
-                             family="cnn")               # Eq. 1
+    scores = adapter.cycle_scores(params, prev)          # Eq. 1
     state = ST.end_cycle(state, scores, hcfg)            # C_s rotation
     print(f"cycle {cycle}: loss={float(loss):.3f} "
           f"selected={frac:.2f} (target P={volume:.2f})")

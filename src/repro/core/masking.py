@@ -124,3 +124,16 @@ def cnn_expand_masks_batch(unit_masks: Dict[str, jax.Array], params_tree):
     aggregation.
     """
     return jax.vmap(lambda um: cnn_expand_masks(um, params_tree))(unit_masks)
+
+
+def expand_masks_batch(axes_tree, unit_masks: Dict[str, jax.Array],
+                       params_tree):
+    """``expand_masks`` over a stacked cohort (generic, axis-driven).
+
+    The logical-axes counterpart of :func:`cnn_expand_masks_batch`:
+    unit_masks leaves carry a leading client axis (C, L, n); params_tree is
+    the UNstacked global template.  Returns leaves shaped (C,) + param.shape
+    for the stacked masked-mean aggregation of any maskable family.
+    """
+    return jax.vmap(lambda um: expand_masks(axes_tree, um, params_tree))(
+        unit_masks)

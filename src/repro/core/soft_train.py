@@ -71,19 +71,18 @@ def end_cycle(state: dict, scores_new: Dict[str, jax.Array],
     }
 
 
-def cycle_scores(params_new, params_old, axes_tree, schema,
-                 family: str = "lm") -> Dict[str, jax.Array]:
-    """Eq. 1 scores from a cycle's parameter delta."""
-    d = C.delta(params_new, params_old)
-    if family == "cnn":
-        return C.cnn_unit_scores(d, schema)
-    return C.unit_scores(d, axes_tree, schema)
+def cycle_scores(params_new, params_old, axes_tree,
+                 schema) -> Dict[str, jax.Array]:
+    """Eq. 1 scores from a cycle's parameter delta (axis-driven).
+
+    Family dispatch (axis-driven vs CNN prefix-keyed reduction) lives in
+    federated.adapter.FamilyAdapter.cycle_scores — no family strings here.
+    """
+    return C.unit_scores(C.delta(params_new, params_old), axes_tree, schema)
 
 
-def grad_scores(grads, axes_tree, schema, family: str = "lm"):
+def grad_scores(grads, axes_tree, schema):
     """grad_ema variant: per-unit |grad| of one step (O(units) state)."""
-    if family == "cnn":
-        return C.cnn_unit_scores(grads, schema)
     return C.unit_scores(grads, axes_tree, schema)
 
 

@@ -34,6 +34,22 @@ def partition_noniid(labels: np.ndarray, n_clients: int,
     return out
 
 
+def partition_by_topic(topics: np.ndarray, n_clients: int,
+                       topics_per_client: int = 2,
+                       seed: int = 0) -> List[np.ndarray]:
+    """Non-IID federated token streams: each client's corpus covers only a
+    few Markov topics.
+
+    The LM analogue of the label sort-and-shard split: documents are sorted
+    by their latent topic id (data.synthetic.markov_topic_tokens) and each
+    client is dealt ``topics_per_client`` contiguous shards, so its local
+    next-token statistics come from a small subset of the topic mixture —
+    the token-stream counterpart of "each client sees only a few classes".
+    """
+    return partition_noniid(topics, n_clients,
+                            shards_per_client=topics_per_client, seed=seed)
+
+
 def label_distribution(labels: np.ndarray, parts: List[np.ndarray],
                        num_classes: int) -> np.ndarray:
     """(clients, classes) histogram — used to verify Non-IID skew in tests."""

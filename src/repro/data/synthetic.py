@@ -59,6 +59,36 @@ def markov_tokens(num_seqs: int, seq_len: int, vocab: int, seed: int = 0,
     return out
 
 
+def markov_topic_tokens(num_seqs: int, seq_len: int, vocab: int,
+                        n_topics: int = 8, seed: int = 0,
+                        branching: int = 8, table_seed: int = 1234
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """(N, S) int32 sequences + (N,) int32 latent topic per document.
+
+    Each topic is its own sparse random Markov chain (independent successor
+    table), so documents of different topics have disjoint transition
+    statistics.  The topic id plays the role of the class label in the
+    federated Non-IID split: dealing whole topics to clients
+    (data.federated.partition_by_topic) skews per-client token statistics
+    the same way label sort-and-shard skews per-client class histograms.
+
+    ``table_seed`` fixes the per-topic transition tables independently of
+    the sample ``seed`` so train/test streams drawn with different seeds
+    share the same underlying language (mirrors ``template_seed`` above).
+    """
+    trng = np.random.default_rng(table_seed)
+    rng = np.random.default_rng(seed)
+    succ = trng.integers(0, vocab, size=(n_topics, vocab, branching))
+    topics = rng.integers(0, n_topics, size=num_seqs).astype(np.int32)
+    out = np.empty((num_seqs, seq_len), np.int32)
+    state = rng.integers(0, vocab, size=num_seqs)
+    for t in range(seq_len):
+        out[:, t] = state
+        choice = rng.integers(0, branching, size=num_seqs)
+        state = succ[topics, state, choice]
+    return out, topics
+
+
 def batches(arrays, batch_size: int, seed: int = 0, epochs: int = 10 ** 9):
     """Shuffled minibatch iterator over aligned arrays."""
     n = len(arrays[0])

@@ -1,7 +1,10 @@
+from repro.federated.adapter import (CNNAdapter, FamilyAdapter,
+                                     TokenLMAdapter, make_adapter)
 from repro.federated.heterogeneity import (CAPABLE, TABLE_I, SimClock,
                                            cycle_time, make_fleet)
 from repro.federated.runtime import (BatchedFLRun, Client, FLRun,
                                      setup_clients)
 
 __all__ = ["FLRun", "BatchedFLRun", "Client", "setup_clients", "make_fleet",
-           "cycle_time", "SimClock", "TABLE_I", "CAPABLE"]
+           "cycle_time", "SimClock", "TABLE_I", "CAPABLE",
+           "FamilyAdapter", "CNNAdapter", "TokenLMAdapter", "make_adapter"]

@@ -1,0 +1,163 @@
+"""Family adapters: the seam between model families and the FL round engines.
+
+The round engines (federated.runtime) are family-blind: everything that
+varies by model family — batch sampling and shapes (images+labels vs token
+streams), the eval metric (accuracy vs cross-entropy), per-unit cycle-score
+computation, and parameter-space mask expansion for masked-mean aggregation —
+lives behind a :class:`FamilyAdapter`.  To federate a new family, implement
+the five family hooks below and register it in :func:`make_adapter`; the
+sequential and batched engines, elastic scaling, checkpointing, and the
+schemes/baselines all come for free.
+
+A family must provide:
+
+* a ``ModelAPI`` (models.api.build) with a ``loss_fn(params, batch, cfg, rt,
+  masks)`` and a ``mask_schema`` of maskable units;
+* train/test data as a dict of aligned arrays whose keys match the model's
+  batch dict (e.g. ``{"images", "labels"}`` or ``{"tokens"}``), indexed
+  along axis 0 by example;
+* an eval chunk reducer returning ``(metric_sum, weight)`` so the engines
+  can evaluate the full test set in jitted chunks;
+* per-unit contribution scores for a parameter delta (Eq. 1);
+* unit-mask -> parameter-space mask expansion (masked-mean aggregation).
+
+Both concrete adapters are vmap-safe: every hook that runs inside the
+batched engine's round program (loss, scores, mask expansion) contains no
+Python branching on traced values.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import contribution as C
+from repro.core import masking as MK
+from repro.models import build, default_runtime, logical_axes
+from repro.models.cnn import cnn_logits
+
+#: model families whose batch is a plain token stream {"tokens": (B, S)}
+TOKEN_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+
+class FamilyAdapter:
+    """Base adapter: generic example-indexed data handling + family hooks."""
+
+    #: history/metric key ("acc" higher-is-better, "ce" lower-is-better)
+    metric_name: str = "metric"
+    #: True when larger metric values are better (accuracy-style)
+    higher_is_better: bool = True
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.api = build(cfg)
+        self.axes = logical_axes(cfg)
+        self.schema = self.api.mask_schema
+
+    # -- data ----------------------------------------------------------
+    def num_examples(self, data: Dict[str, np.ndarray]) -> int:
+        return len(next(iter(data.values())))
+
+    def sample_batch(self, rng: np.random.Generator,
+                     data: Dict[str, np.ndarray], idx: np.ndarray,
+                     local_steps: int, batch_size: int) -> dict:
+        """Draw a (local_steps, batch_size)-leading batch dict from one
+        client's example indices, consuming the host RNG exactly once (the
+        batched engine replays the sequential engine's draw order)."""
+        take = rng.choice(idx, size=(local_steps, batch_size),
+                          replace=len(idx) < local_steps * batch_size)
+        return {k: jnp.asarray(v[take]) for k, v in data.items()}
+
+    def eval_slice(self, data: Dict[str, np.ndarray], lo: int,
+                   hi: int) -> dict:
+        return {k: jnp.asarray(v[lo:hi]) for k, v in data.items()}
+
+    # -- family hooks --------------------------------------------------
+    def loss_fn(self, params, batch, masks):
+        """Masked training loss — traced inside the round program."""
+        raise NotImplementedError
+
+    def eval_chunk(self, params, batch):
+        """(metric_sum, weight) over one test chunk — jitted by the engine."""
+        raise NotImplementedError
+
+    def cycle_scores(self, params_new, params_old):
+        """Eq. 1 per-unit contribution scores of a cycle's parameter delta."""
+        raise NotImplementedError
+
+    def expand_masks(self, unit_masks, params_tree):
+        """Unit masks -> params-shaped 0/1 tree (masked-mean aggregation)."""
+        raise NotImplementedError
+
+    def expand_masks_batch(self, unit_masks, params_tree):
+        """``expand_masks`` over a stacked cohort (leading client axis).
+
+        Works for any family whose ``expand_masks`` is vmap-safe, so new
+        adapters get the batched aggregation path for free.
+        """
+        return jax.vmap(lambda um: self.expand_masks(um, params_tree))(
+            unit_masks)
+
+
+class CNNAdapter(FamilyAdapter):
+    """Paper testbed: image classification, prefix-keyed mask schema."""
+
+    metric_name = "acc"
+    higher_is_better = True
+
+    def loss_fn(self, params, batch, masks):
+        return self.api.loss_fn(params, batch, self.cfg, None, masks)
+
+    def eval_chunk(self, params, batch):
+        logits = cnn_logits(params, batch["images"], self.cfg)
+        correct = jnp.sum(jnp.argmax(logits, -1) == batch["labels"])
+        n = batch["labels"].shape[0]
+        return correct.astype(jnp.float32), jnp.asarray(n, jnp.float32)
+
+    def cycle_scores(self, params_new, params_old):
+        return C.cnn_unit_scores(C.delta(params_new, params_old), self.schema)
+
+    def expand_masks(self, unit_masks, params_tree):
+        return MK.cnn_expand_masks(unit_masks, params_tree)
+
+
+class TokenLMAdapter(FamilyAdapter):
+    """Token-stream LMs (dense / moe / ssm / hybrid): axis-driven scores,
+    cross-entropy eval, generic logical-axes mask expansion."""
+
+    metric_name = "ce"
+    higher_is_better = False
+
+    def __init__(self, cfg: ModelConfig):
+        super().__init__(cfg)
+        self.rt = default_runtime(cfg)
+
+    def loss_fn(self, params, batch, masks):
+        return self.api.loss_fn(params, batch, self.cfg, self.rt, masks)
+
+    def eval_chunk(self, params, batch):
+        ce = self.api.loss_fn(params, batch, self.cfg, self.rt, None)
+        n = batch["tokens"].shape[0]
+        return ce * n, jnp.asarray(n, jnp.float32)
+
+    def cycle_scores(self, params_new, params_old):
+        return C.unit_scores(C.delta(params_new, params_old), self.axes,
+                             self.schema)
+
+    def expand_masks(self, unit_masks, params_tree):
+        return MK.expand_masks(self.axes, unit_masks, params_tree)
+
+
+def make_adapter(cfg: ModelConfig) -> FamilyAdapter:
+    """Family dispatch for the FL engines."""
+    if cfg.family == "cnn":
+        return CNNAdapter(cfg)
+    if cfg.family in TOKEN_FAMILIES:
+        return TokenLMAdapter(cfg)
+    raise NotImplementedError(
+        f"no FamilyAdapter for family {cfg.family!r}: encdec/vlm need extra "
+        "input streams (enc_embeds / image_embeds) — subclass FamilyAdapter "
+        "with a sample_batch that supplies them and register it here")

@@ -10,12 +10,17 @@
   st_only  — Helios soft-training WITHOUT the Eq. 10 aggregation
              optimization (the §VII.C ablation)
 
-Time is simulated (heterogeneity.cycle_time); accuracy is real (models train
-on real arrays).  The sync engines are also the reference semantics for the
-datacenter pjit path (launch/train.py), which fuses the same round into one
-compiled program.
+Time is simulated (heterogeneity.cycle_time); the metric is real (models
+train on real arrays).  The engines are FAMILY-BLIND: everything that varies
+by model family — batch sampling/shapes, eval metric, cycle-score reduction,
+parameter-space mask expansion — lives behind federated.adapter.FamilyAdapter,
+so the same engines federate the CNN testbed and the token-stream LM families
+(dense / moe / ssm / hybrid).  Train/test data are dicts of aligned arrays
+keyed like the model's batch (``{"images", "labels"}`` or ``{"tokens"}``),
+indexed along axis 0 by example.
 
-Two sync engines share those semantics:
+Two sync engines share the reference semantics (also mirrored by the
+datacenter pjit path, launch/train.py):
 
 * :class:`FLRun` — the sequential reference: a Python loop re-dispatching
   ``_local_train`` per client.  Simple, but the host loop caps the simulated
@@ -31,7 +36,8 @@ Two sync engines share those semantics:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -44,34 +50,32 @@ from repro.core import soft_train as ST
 from repro.core import volume as VOL
 from repro.core.identification import (DeviceProfile, identify_resource_based,
                                        identify_time_based)
+from repro.federated.adapter import FamilyAdapter, make_adapter
 from repro.federated.heterogeneity import SimClock, cycle_time
-from repro.models import build, init_params, logical_axes
-from repro.models.cnn import cnn_accuracy
+from repro.models import init_params
 from repro.optim import apply_updates, make_optimizer
 
 
-def _make_local_train(api, cfg: ModelConfig, opt):
+def _make_local_train(adapter: FamilyAdapter, opt):
     """E masked local SGD steps under lax.scan — the one training loop both
     engines share (sequential jits it directly; batched vmaps it per cohort,
-    which keeps the two engines numerically in lock-step)."""
+    which keeps the two engines numerically in lock-step).  ``batches`` is a
+    dict pytree whose leaves carry a leading (local_steps,) axis."""
 
-    def local_train(params, batch_imgs, batch_labels, masks):
+    def local_train(params, batches, masks):
         opt_state = opt.init(params)
 
-        def step(carry, b):
+        def step(carry, batch):
             p, s = carry
-            imgs, labs = b
 
             def loss_fn(pp):
-                return api.loss_fn(pp, {"images": imgs, "labels": labs},
-                                   cfg, None, masks)
+                return adapter.loss_fn(pp, batch, masks)
 
             loss, grads = jax.value_and_grad(loss_fn)(p)
             updates, s = opt.update(grads, s, p, 0)
             return (apply_updates(p, updates), s), loss
 
-        (params, _), losses = jax.lax.scan(step, (params, opt_state),
-                                           (batch_imgs, batch_labels))
+        (params, _), losses = jax.lax.scan(step, (params, opt_state), batches)
         return params, losses.mean()
 
     return local_train
@@ -119,19 +123,18 @@ class FLRun:
     hcfg: HeliosConfig
     scheme: str
     clients: List[Client]
-    images: np.ndarray
-    labels: np.ndarray
-    test_images: np.ndarray
-    test_labels: np.ndarray
+    train_data: Dict[str, np.ndarray]
+    test_data: Dict[str, np.ndarray]
     batch_size: int = 32
     local_steps: int = 5
     lr: float = 0.05
     seed: int = 0
-    eval_batch: int = 512
+    eval_batch: int = 512              # eval CHUNK size (full set is scored)
 
     def __post_init__(self):
-        self.api = build(self.cfg)
-        self.axes = logical_axes(self.cfg)
+        self.adapter = make_adapter(self.cfg)
+        self.api = self.adapter.api
+        self.axes = self.adapter.axes
         self.global_params = init_params(jax.random.PRNGKey(self.seed),
                                          self.cfg)
         self.opt = make_optimizer("momentum", self.lr)
@@ -144,27 +147,24 @@ class FLRun:
     # ------------------------------------------------------------------
     def _init_helios(self):
         for c in self.clients:
-            c.helios_state = ST.init_state(self.api.mask_schema,
+            c.helios_state = ST.init_state(self.adapter.schema,
                                            volume=c.volume, seed=c.cid)
 
     def _jit(self):
-        cfg = self.cfg
-        self._local_train = jax.jit(_make_local_train(self.api, cfg,
-                                                      self.opt))
-        self._eval = jax.jit(lambda p, x, y: cnn_accuracy(p, x, y, cfg))
+        self._local_train = jax.jit(_make_local_train(self.adapter, self.opt))
+        self._eval_chunk = jax.jit(self.adapter.eval_chunk)
 
     # ------------------------------------------------------------------
-    def _sample_batches(self, client: Client) -> tuple:
-        idx = client.data_idx
-        take = self.rng.choice(idx, size=(self.local_steps, self.batch_size),
-                               replace=len(idx) < self.local_steps * self.batch_size)
-        return self.images[take], self.labels[take]
+    def _sample_batches(self, client: Client) -> dict:
+        return self.adapter.sample_batch(self.rng, self.train_data,
+                                         client.data_idx, self.local_steps,
+                                         self.batch_size)
 
     def _client_masks(self, client: Client) -> dict:
         if self.scheme in ("helios", "st_only", "random") and client.is_straggler:
             return client.helios_state["masks"]
         return {k: jnp.ones(s, jnp.float32)
-                for k, s in self.api.mask_schema.items()}
+                for k, s in self.adapter.schema.items()}
 
     def _client_cycle(self, client: Client, base_params):
         """One local training cycle; returns (new_params, masks, ratio)."""
@@ -174,11 +174,10 @@ class FLRun:
         if self.scheme in ("helios", "st_only", "random") and client.is_straggler:
             client.helios_state = ST.begin_cycle(client.helios_state, hcfg)
         masks = self._client_masks(client)
-        imgs, labs = self._sample_batches(client)
-        new_params, loss = self._local_train(base_params, imgs, labs, masks)
+        batches = self._sample_batches(client)
+        new_params, loss = self._local_train(base_params, batches, masks)
         if self.scheme in ("helios", "st_only") and client.is_straggler:
-            scores = ST.cycle_scores(new_params, base_params, self.axes,
-                                     self.api.mask_schema, family="cnn")
+            scores = self.adapter.cycle_scores(new_params, base_params)
             client.helios_state = ST.end_cycle(client.helios_state, scores,
                                                self.hcfg)
         elif self.scheme == "random" and client.is_straggler:
@@ -199,7 +198,7 @@ class FLRun:
         else:
             mode = "uniform"
         if mode == "masked_mean":
-            pmasks = [MK.cnn_expand_masks(r[1], self.global_params)
+            pmasks = [self.adapter.expand_masks(r[1], self.global_params)
                       for r in results]
             self.global_params = AG.aggregate_masked_mean(
                 self.global_params, params, pmasks, ratios)
@@ -208,9 +207,20 @@ class FLRun:
                                               params, ratios=ratios)
 
     def evaluate(self) -> float:
-        n = min(self.eval_batch, len(self.test_labels))
-        return float(self._eval(self.global_params, self.test_images[:n],
-                                self.test_labels[:n]))
+        """Full-test-set metric in jitted chunks of ``eval_batch``.
+
+        A weighted mean over chunks, so the reported number is never a
+        fixed-subset estimate (the last ragged chunk pays one extra compile).
+        """
+        n = self.adapter.num_examples(self.test_data)
+        total = weight = 0.0
+        for lo in range(0, n, self.eval_batch):
+            chunk = self.adapter.eval_slice(self.test_data, lo,
+                                            min(lo + self.eval_batch, n))
+            s, w = self._eval_chunk(self.global_params, chunk)
+            total += float(s)
+            weight += float(w)
+        return total / max(weight, 1e-9)
 
     # ------------------------------------------------------------------
     # engines
@@ -229,7 +239,8 @@ class FLRun:
         if eval_every > 0 and (r % eval_every == 0 or r == rounds - 1):
             self.history.append({
                 "scheme": self.scheme, "cycle": r + 1, "time": clock,
-                "acc": self.evaluate(), "loss": loss, "ratios": ratios,
+                self.adapter.metric_name: self.evaluate(), "loss": loss,
+                "ratios": ratios,
                 "volumes": [c.volume for c in self.clients]})
 
     def run_sync(self, rounds: int, eval_every: int = 1) -> List[dict]:
@@ -257,7 +268,8 @@ class FLRun:
         return self.history
 
     def run_async(self, capable_cycles: int, mix_weight: float = 0.5,
-                  staleness_a: float = 0.5, eval_every: int = 1) -> List[dict]:
+                  staleness_a: float = 0.5, eval_every: int = 1,
+                  snapshot_cap: int = 64) -> List[dict]:
         """asyn / afo: event-driven, no waiting for stragglers."""
         clock = SimClock()
         snapshots = {0: self.global_params}
@@ -270,7 +282,9 @@ class FLRun:
         while done_fast < capable_cycles and not clock.empty():
             cid = clock.pop()
             c = by_id[cid]
-            base = snapshots.get(c.staleness_anchor, self.global_params)
+            # anchors are never evicted (below), so this lookup cannot fall
+            # back to the current global params and mislabel staleness
+            base = snapshots[c.staleness_anchor]
             new_params, _, _, loss = self._client_cycle(c, base)
             stale = agg_counter - c.staleness_anchor
             w = mix_weight
@@ -279,16 +293,25 @@ class FLRun:
             self.global_params = AG.mix(self.global_params, new_params, w)
             agg_counter += 1
             snapshots[agg_counter] = self.global_params
-            if len(snapshots) > 64:
-                snapshots.pop(min(snapshots))
             c.staleness_anchor = agg_counter
+            if len(snapshots) > snapshot_cap:
+                # evict oldest-first, but only snapshots no live client is
+                # anchored to — a slow straggler keeps its base alive, so
+                # the dict is bounded by snapshot_cap + len(clients)
+                anchored = {cl.staleness_anchor for cl in self.clients}
+                for k in sorted(snapshots):
+                    if len(snapshots) <= snapshot_cap:
+                        break
+                    if k != agg_counter and k not in anchored:
+                        del snapshots[k]
             clock.schedule(cycle_time(c.profile, 1.0), cid)
             if not c.is_straggler:
                 done_fast += 1
                 if eval_every > 0 and done_fast % eval_every == 0:
                     self.history.append({
                         "scheme": self.scheme, "cycle": done_fast,
-                        "time": clock.now, "acc": self.evaluate(),
+                        "time": clock.now,
+                        self.adapter.metric_name: self.evaluate(),
                         "loss": loss, "staleness": stale})
         return self.history
 
@@ -317,7 +340,7 @@ class FLRun:
             if is_straggler else 1.0
         c = Client(cid=cid, profile=profile, data_idx=data_idx, volume=vol,
                    is_straggler=is_straggler)
-        c.helios_state = ST.init_state(self.api.mask_schema, volume=vol,
+        c.helios_state = ST.init_state(self.adapter.schema, volume=vol,
                                        seed=cid)
         self.clients.append(c)
         return c
@@ -351,6 +374,11 @@ class BatchedFLRun(FLRun):
     to the sequential engine.
     """
 
+    #: max distinct (n_s, n_c) cohort shapes kept compiled; elastic churn
+    #: across many shapes evicts least-recently-used programs instead of
+    #: growing the cache without bound
+    round_cache_cap: int = 8
+
     def __post_init__(self):
         super().__post_init__()
         self._build_batched()
@@ -368,26 +396,30 @@ class BatchedFLRun(FLRun):
         self._sstate = ST.stack_states(
             [self.clients[i].helios_state for i in self._s_idx]) \
             if self._s_idx else None
-        # one compiled program per cohort shape; unperm is a traced arg, so
-        # elastic churn returning to a seen (n_s, n_c) pays no recompile
+        # LRU of compiled programs keyed by cohort shape; unperm is a traced
+        # arg, so elastic churn returning to a recently-seen (n_s, n_c) pays
+        # no recompile, and shapes beyond ``round_cache_cap`` are evicted
         if not hasattr(self, "_round_cache"):
-            self._round_cache = {}
+            self._round_cache = OrderedDict()
         key = (len(self._s_idx), len(self._c_idx))
-        if key not in self._round_cache:
+        if key in self._round_cache:
+            self._round_cache.move_to_end(key)
+        else:
             self._round_cache[key] = jax.jit(self._make_round_fn(*key))
+            while len(self._round_cache) > self.round_cache_cap:
+                self._round_cache.popitem(last=False)
         self._round_fn = self._round_cache[key]
 
     def _make_round_fn(self, n_s: int, n_c: int):
-        cfg, api, axes, opt = self.cfg, self.api, self.axes, self.opt
+        adapter, opt = self.adapter, self.opt
         hcfg, scheme = self.hcfg, self.scheme
-        schema = api.mask_schema
+        schema = adapter.schema
         hcfg_eff = _random_hcfg(hcfg) if scheme == "random" else hcfg
         agg_mode = hcfg.aggregation if scheme == "helios" else "uniform"
         ones_masks = {k: jnp.ones(s, jnp.float32) for k, s in schema.items()}
-        local_train = _make_local_train(api, cfg, opt)
+        local_train = _make_local_train(adapter, opt)
 
-        def round_fn(global_params, sstate, s_imgs, s_labs, c_imgs, c_labs,
-                     unperm):
+        def round_fn(global_params, sstate, s_batch, c_batch, unperm):
             def cat(parts):
                 if len(parts) == 1:
                     return jax.tree.map(
@@ -399,27 +431,26 @@ class BatchedFLRun(FLRun):
             parts_p, parts_r, parts_l, parts_m = [], [], [], []
             new_sstate = sstate
             if n_s:
-                def one_straggler(st, im, lb):
+                def one_straggler(st, batches):
                     st = ST.begin_cycle(st, hcfg_eff)
                     masks = st["masks"]
-                    p, loss = local_train(global_params, im, lb, masks)
+                    p, loss = local_train(global_params, batches, masks)
                     if scheme in ("helios", "st_only"):
-                        scores = ST.cycle_scores(p, global_params, axes,
-                                                 schema, family="cnn")
+                        scores = adapter.cycle_scores(p, global_params)
                         st = ST.end_cycle(st, scores, hcfg)
                     else:                                  # random [12]
                         st = ST.end_cycle(st, st["scores"], hcfg_eff)
                     return (p, st, MK.selected_fraction(masks), loss, masks)
 
                 p, new_sstate, r, l, m = jax.vmap(one_straggler)(
-                    sstate, s_imgs, s_labs)
+                    sstate, s_batch)
                 parts_p.append(p), parts_r.append(r), parts_l.append(l)
                 parts_m.append(m)
             if n_c:
-                def one_capable(im, lb):
-                    return local_train(global_params, im, lb, ones_masks)
+                def one_capable(batches):
+                    return local_train(global_params, batches, ones_masks)
 
-                p, l = jax.vmap(one_capable)(c_imgs, c_labs)
+                p, l = jax.vmap(one_capable)(c_batch)
                 parts_p.append(p)
                 parts_r.append(jnp.ones((n_c,), jnp.float32))
                 parts_l.append(l)
@@ -429,7 +460,7 @@ class BatchedFLRun(FLRun):
             stacked = cat(parts_p)
             ratios = cat(parts_r)
             losses = cat(parts_l)
-            pmasks = MK.cnn_expand_masks_batch(cat(parts_m), global_params) \
+            pmasks = adapter.expand_masks_batch(cat(parts_m), global_params) \
                 if agg_mode == "masked_mean" else None
             new_global = AG.aggregate_stacked(agg_mode, global_params,
                                               stacked, ratios, pmasks)
@@ -445,9 +476,9 @@ class BatchedFLRun(FLRun):
 
         def stack(idx):
             if not idx:
-                return None, None
-            return (jnp.stack([per[i][0] for i in idx]),
-                    jnp.stack([per[i][1] for i in idx]))
+                return None
+            return jax.tree.map(lambda *xs: jnp.stack(xs),
+                                *[per[i] for i in idx])
 
         return stack(self._s_idx), stack(self._c_idx)
 
@@ -456,10 +487,10 @@ class BatchedFLRun(FLRun):
         clock = 0.0
         for r in range(rounds):
             times = self._round_times()
-            (s_imgs, s_labs), (c_imgs, c_labs) = self._sample_cohort_batches()
+            s_batch, c_batch = self._sample_cohort_batches()
             self.global_params, self._sstate, ratios, losses = \
                 self._round_fn(self.global_params, self._sstate,
-                               s_imgs, s_labs, c_imgs, c_labs, self._unperm)
+                               s_batch, c_batch, self._unperm)
             if self.scheme == "helios" and self.hcfg.adapt_volume and \
                     self._s_idx:
                 vols = []

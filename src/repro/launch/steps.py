@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import (HeliosConfig, ModelConfig, ShapeConfig,
                                 TrainConfig)
+from repro.core import contribution as CONTRIB
 from repro.core import masking as MK
 from repro.core import soft_train as ST
 from repro.models import (abstract_params, build, decode_cache_specs,
@@ -107,8 +108,9 @@ def make_train_step(cfg: ModelConfig, hcfg: HeliosConfig, tcfg: TrainConfig,
 
         helios = state["helios"]
         if hcfg.enabled:
-            snew = ST.grad_scores(grads, axes, schema,
-                                  "cnn" if cfg.family == "cnn" else "lm")
+            snew = (CONTRIB.cnn_unit_scores(grads, schema)
+                    if cfg.family == "cnn"
+                    else ST.grad_scores(grads, axes, schema))
             helios = {**helios,
                       "scores": {k: hcfg.contribution_ema * helios["scores"][k]
                                  + (1 - hcfg.contribution_ema) * snew[k]

@@ -37,7 +37,9 @@ def _make(setting, cls, scheme, hcfg=None, **kw):
     cfg, imgs, labels, ti, tl, parts = setting
     hcfg = hcfg or HeliosConfig()
     clients = setup_clients(make_fleet(2, 2), parts, hcfg)
-    return cls(cfg, hcfg, scheme, clients, imgs, labels, ti, tl,
+    return cls(cfg, hcfg, scheme, clients,
+               {"images": imgs, "labels": labels},
+               {"images": ti, "labels": tl},
                local_steps=2, lr=0.1, seed=0, **kw)
 
 
@@ -93,6 +95,58 @@ def test_batched_state_sync_and_elastic(setting):
     bat.run_sync(1)                                       # still trains
 
 
+def test_batched_elastic_states_match_sequential(setting):
+    """add_client/remove_client mid-run round-trips sync_client_states ->
+    restack without corrupting straggler masks/scores: after identical churn
+    both engines hold identical per-client Helios state."""
+    cfg, *_, parts = setting
+    seq = _make(setting, FLRun, "helios")
+    bat = _make(setting, BatchedFLRun, "helios")
+    seq.run_sync(2)
+    bat.run_sync(2)
+    ns = seq.add_client(TABLE_I[0], parts[0])
+    nb = bat.add_client(TABLE_I[0], parts[0])
+    assert (ns.cid, ns.is_straggler) == (nb.cid, nb.is_straggler)
+    seq.run_sync(2)
+    bat.run_sync(2)
+    drop = [c.cid for c in seq.clients if c.is_straggler][0]
+    seq.remove_client(drop)
+    bat.remove_client(drop)
+    seq.run_sync(1)
+    bat.run_sync(1)
+    bat.sync_client_states()
+    assert [c.cid for c in seq.clients] == [c.cid for c in bat.clients]
+    for cs, cb in zip(seq.clients, bat.clients):
+        assert cs.is_straggler == cb.is_straggler
+        np.testing.assert_allclose(cs.volume, cb.volume, atol=1e-6)
+        for key in ("masks", "skip_counts", "cycle", "rng"):
+            for a, b in zip(jax.tree.leaves(cs.helios_state[key]),
+                            jax.tree.leaves(cb.helios_state[key])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(cs.helios_state["scores"]),
+                        jax.tree.leaves(cb.helios_state["scores"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-4)
+
+
+def test_round_cache_lru_bounded(setting):
+    """Elastic churn across many distinct cohort shapes must not grow the
+    compiled-program cache without limit."""
+    cfg, *_, parts = setting
+    bat = _make(setting, BatchedFLRun, "helios")
+    bat.round_cache_cap = 2
+    added = []
+    for i in range(3):
+        c = bat.add_client(TABLE_I[i % len(TABLE_I)],
+                           parts[i % len(parts)])
+        added.append(c.cid)
+        assert len(bat._round_cache) <= 2
+    for cid in added:
+        bat.remove_client(cid)
+        assert len(bat._round_cache) <= 2
+    bat.run_sync(1)                               # still trains post-eviction
+
+
 def test_all_straggler_pace_is_finite(setting):
     """Regression: an all-straggler cohort used to propagate a NaN
     collaboration pace (truthy NaN median) into volume adaptation."""
@@ -101,7 +155,9 @@ def test_all_straggler_pace_is_finite(setting):
     clients = [Client(cid=i, profile=TABLE_I[i % len(TABLE_I)],
                       data_idx=parts[i % len(parts)], volume=0.5,
                       is_straggler=True) for i in range(2)]
-    run = FLRun(cfg, hcfg, "helios", clients, imgs, labels, ti, tl,
+    run = FLRun(cfg, hcfg, "helios", clients,
+                {"images": imgs, "labels": labels},
+                {"images": ti, "labels": tl},
                 local_steps=1, lr=0.1, seed=0)
     hist = run.run_sync(2)
     for c in run.clients:

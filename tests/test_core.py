@@ -95,6 +95,21 @@ def test_expand_masks_outer_product():
     assert (m[0, :, 2] == 0).all()
 
 
+def test_expand_masks_batch_matches_per_client():
+    """The generic stacked expansion is exactly a vmap of expand_masks."""
+    params = {"wi": jnp.ones((2, 4, 6))}           # (E, d, ff)
+    axes = {"wi": ("experts", "embed", "mlp")}
+    stacked = {"experts": jnp.array([[[1.0, 0.0]], [[0.0, 1.0]]]),
+               "mlp": jnp.ones((2, 1, 6), jnp.float32)}
+    out = MK.expand_masks_batch(axes, stacked, params)
+    assert np.asarray(out["wi"]).shape == (2, 2, 4, 6)
+    for i in range(2):
+        one = MK.expand_masks(
+            axes, {k: v[i] for k, v in stacked.items()}, params)
+        np.testing.assert_array_equal(np.asarray(out["wi"])[i],
+                                      np.asarray(one["wi"]))
+
+
 def test_selected_fraction():
     masks = {"a": jnp.array([[1.0, 0.0, 1.0, 0.0]])}
     assert float(MK.selected_fraction(masks)) == 0.5

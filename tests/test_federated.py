@@ -32,7 +32,9 @@ def _run(setting, scheme, rounds=6, **kw):
     cfg, imgs, labels, ti, tl, parts = setting
     hcfg = HeliosConfig()
     clients = setup_clients(make_fleet(2, 2), parts, hcfg)
-    run = FLRun(cfg, hcfg, scheme, clients, imgs, labels, ti, tl,
+    run = FLRun(cfg, hcfg, scheme, clients,
+                {"images": imgs, "labels": labels},
+                {"images": ti, "labels": tl},
                 local_steps=4, lr=0.1, **kw)
     if scheme in ("syn", "helios", "st_only", "random"):
         return run, run.run_sync(rounds)
@@ -86,6 +88,32 @@ def test_elastic_add_remove(setting):
     run.run_sync(1)                               # still trains with the newcomer
     run.remove_client(new.cid)
     assert len(run.clients) == n0
+
+
+def test_async_anchor_survives_snapshot_eviction(setting):
+    """Regression: the async engines evicted the OLDEST snapshot even while
+    a live client was still anchored to it, silently rebasing that client on
+    the current global params with a mislabeled staleness.  Anchored
+    snapshots must survive eviction (run_async indexes them directly, so a
+    wrongly-evicted anchor would KeyError here)."""
+    run, _ = _run(setting, "afo", rounds=0)
+    hist = run.run_async(8, snapshot_cap=1)
+    assert len(hist) >= 4
+    assert all(h["staleness"] >= 0 for h in hist)
+    for c in run.clients:
+        assert c.staleness_anchor >= 0
+
+
+def test_evaluate_covers_full_test_set(setting):
+    """evaluate() scores the WHOLE test set in jitted chunks; the chunked
+    weighted mean equals the single-shot metric exactly."""
+    run, _ = _run(setting, "syn", rounds=1)
+    n_test = len(setting[4])
+    run.eval_batch = n_test                       # one full-set chunk
+    full = run.evaluate()
+    run.eval_batch = 96                           # ragged chunking (96*4+16)
+    chunked = run.evaluate()
+    assert abs(full - chunked) < 1e-6
 
 
 def test_fl_state_checkpoint_restart(setting, tmp_path):

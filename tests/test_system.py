@@ -30,7 +30,9 @@ def histories(world):
     def run(scheme, rounds):
         hcfg = HeliosConfig()
         clients = setup_clients(make_fleet(2, 2), parts, hcfg)
-        r = FLRun(cfg, hcfg, scheme, clients, imgs, labels, ti, tl,
+        r = FLRun(cfg, hcfg, scheme, clients,
+                  {"images": imgs, "labels": labels},
+                  {"images": ti, "labels": tl},
                   local_steps=2, lr=0.02)
         if scheme in ("syn", "helios", "st_only", "random"):
             return r.run_sync(rounds)
