@@ -22,6 +22,7 @@ from typing import Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import HeliosConfig
 from repro.core import contribution as C
@@ -108,3 +109,65 @@ def unstack_states(stacked: dict, n: int) -> List[dict]:
 def set_volumes(stacked: dict, volumes: Sequence[float]) -> dict:
     """Write the (C,) volume leaf of a stacked state."""
     return {**stacked, "volume": jnp.asarray(volumes, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# persistent-population state (partial participation)
+# ---------------------------------------------------------------------------
+
+
+def init_population(schema: Dict[str, tuple], volumes: Sequence[float],
+                    seeds: Sequence[int]) -> dict:
+    """Stacked state for a whole population, built WITHOUT materializing N
+    per-client dicts.
+
+    Row i is bit-identical to ``init_state(schema, volume=volumes[i],
+    seed=seeds[i])`` (the PRNG keys are vmapped ``PRNGKey`` calls), so a
+    population engine seeds exactly like the sequential reference.
+    """
+    n = len(list(seeds))
+    return {
+        "masks": {k: jnp.ones((n,) + tuple(s), jnp.float32)
+                  for k, s in schema.items()},
+        "scores": {k: jnp.zeros((n,) + tuple(s), jnp.float32)
+                   for k, s in schema.items()},
+        "skip_counts": {k: jnp.zeros((n,) + tuple(s), jnp.int32)
+                        for k, s in schema.items()},
+        "volume": jnp.asarray(list(volumes), jnp.float32),
+        "rng": jax.vmap(jax.random.PRNGKey)(
+            jnp.asarray(list(seeds), jnp.int64
+                        if jax.config.jax_enable_x64 else jnp.int32)),
+        "cycle": jnp.zeros((n,), jnp.int32),
+    }
+
+
+def host_states(stacked: dict) -> dict:
+    """Population state with HOST (numpy) leaves.
+
+    The sharded engine keeps the N-client state host-resident: per-round
+    gathers copy just the cohort's rows to device, scatters write them back
+    IN PLACE (no N-sized reallocation per round), and — because host arrays
+    are uncommitted jit inputs — every round presents the identical input
+    sharding signature, so the round program never recompiles.
+    """
+    # np.array (not asarray): device arrays view as READ-ONLY numpy; the
+    # population rows must stay writable for in-place scatters
+    return jax.tree.map(np.array, stacked)
+
+
+def gather_states_host(pop: dict, idx) -> dict:
+    """Cohort rows of a host population state (fancy indexing => copies,
+    so later in-place scatters can't corrupt the gathered cohort)."""
+    idx = np.asarray(idx)
+    return jax.tree.map(lambda x: x[idx], pop)
+
+
+def scatter_states_host(pop: dict, idx, sub: dict) -> None:
+    """In-place inverse of ``gather_states_host`` (``idx`` duplicate-free;
+    device leaves in ``sub`` are pulled to host)."""
+    idx = np.asarray(idx)
+
+    def write(x, s):
+        x[idx] = np.asarray(s)
+
+    jax.tree.map(write, pop, sub)

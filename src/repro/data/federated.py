@@ -50,6 +50,60 @@ def partition_by_topic(topics: np.ndarray, n_clients: int,
                             shards_per_client=topics_per_client, seed=seed)
 
 
+class _LazyView:
+    """One client's sorted index slice, materialized on demand.
+
+    Behaves like an ndarray wherever the adapters need one (``len`` for the
+    replacement decision, ``np.asarray`` for the actual draw) without
+    holding a per-client copy.
+    """
+
+    __slots__ = ("_perm", "_lo", "_hi")
+
+    def __init__(self, perm: np.ndarray, lo: int, hi: int):
+        self._perm, self._lo, self._hi = perm, lo, hi
+
+    def __len__(self) -> int:
+        return self._hi - self._lo
+
+    def __array__(self, dtype=None, copy=None):
+        out = np.sort(self._perm[self._lo:self._hi])
+        return out.astype(dtype) if dtype is not None else out
+
+
+class LazyParts:
+    """List-like IID partition over ``n_clients`` that stores ONE shared
+    permutation instead of ``n_clients`` index arrays.
+
+    Produces exactly the same per-client indices as :func:`partition_iid`
+    for the same seed (same permutation, same ``array_split`` boundaries),
+    so population-scale engines can swap it in without changing draws.
+    """
+
+    def __init__(self, perm: np.ndarray, n_clients: int):
+        self._perm = perm
+        n, k = len(perm), n_clients
+        sizes = [n // k + (1 if i < n % k else 0) for i in range(k)]
+        self._bounds = np.concatenate([[0], np.cumsum(sizes)])
+
+    def __len__(self) -> int:
+        return len(self._bounds) - 1
+
+    def __getitem__(self, i: int) -> _LazyView:
+        if i < 0:
+            i += len(self)
+        return _LazyView(self._perm, int(self._bounds[i]),
+                         int(self._bounds[i + 1]))
+
+
+def partition_iid_lazy(n_items: int, n_clients: int,
+                       seed: int = 0) -> LazyParts:
+    """IID split that never materializes per-client arrays (N=4096-scale
+    populations); index-for-index equal to :func:`partition_iid`."""
+    rng = np.random.default_rng(seed)
+    return LazyParts(rng.permutation(n_items), n_clients)
+
+
 def label_distribution(labels: np.ndarray, parts: List[np.ndarray],
                        num_classes: int) -> np.ndarray:
     """(clients, classes) histogram — used to verify Non-IID skew in tests."""

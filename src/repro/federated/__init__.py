@@ -3,8 +3,9 @@ from repro.federated.adapter import (CNNAdapter, FamilyAdapter,
 from repro.federated.heterogeneity import (CAPABLE, TABLE_I, SimClock,
                                            cycle_time, make_fleet)
 from repro.federated.runtime import (BatchedFLRun, Client, FLRun,
-                                     setup_clients)
+                                     ShardedFLRun, setup_clients)
 
-__all__ = ["FLRun", "BatchedFLRun", "Client", "setup_clients", "make_fleet",
+__all__ = ["FLRun", "BatchedFLRun", "ShardedFLRun", "Client",
+           "setup_clients", "make_fleet",
            "cycle_time", "SimClock", "TABLE_I", "CAPABLE",
            "FamilyAdapter", "CNNAdapter", "TokenLMAdapter", "make_adapter"]

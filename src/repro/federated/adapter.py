@@ -66,10 +66,34 @@ class FamilyAdapter:
                      local_steps: int, batch_size: int) -> dict:
         """Draw a (local_steps, batch_size)-leading batch dict from one
         client's example indices, consuming the host RNG exactly once (the
-        batched engine replays the sequential engine's draw order)."""
+        batched engine replays the sequential engine's draw order).
+
+        ``idx`` may be any array-like — in particular a lazy partition view
+        (data.federated.LazyParts), which only materializes indices for the
+        clients actually sampled into a round's cohort.
+        """
+        idx = np.asarray(idx)
         take = rng.choice(idx, size=(local_steps, batch_size),
                           replace=len(idx) < local_steps * batch_size)
         return {k: jnp.asarray(v[take]) for k, v in data.items()}
+
+    def sample_cohort(self, rng: np.random.Generator,
+                      data: Dict[str, np.ndarray], idx_seq,
+                      local_steps: int, batch_size: int,
+                      pad_to: int = 0) -> dict:
+        """Per-client batches drawn in cohort order, stacked along a leading
+        client axis.
+
+        Padding slots (up to ``pad_to``, for shard-divisible cohort shapes)
+        replicate the first client's draw WITHOUT consuming the host RNG, so
+        the sharded engine stays draw-for-draw equivalent to the sequential
+        one; the engine gives padding slots zero aggregation weight.
+        """
+        per = [self.sample_batch(rng, data, idx, local_steps, batch_size)
+               for idx in idx_seq]
+        if pad_to and pad_to > len(per):
+            per = per + [per[0]] * (pad_to - len(per))
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
 
     def eval_slice(self, data: Dict[str, np.ndarray], lo: int,
                    hi: int) -> dict:

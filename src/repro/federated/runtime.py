@@ -42,6 +42,9 @@ from typing import Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import HeliosConfig, ModelConfig
 from repro.core import aggregation as AG
@@ -52,6 +55,7 @@ from repro.core.identification import (DeviceProfile, identify_resource_based,
                                        identify_time_based)
 from repro.federated.adapter import FamilyAdapter, make_adapter
 from repro.federated.heterogeneity import SimClock, cycle_time
+from repro.launch.mesh import make_client_mesh
 from repro.models import init_params
 from repro.optim import apply_updates, make_optimizer
 
@@ -130,6 +134,13 @@ class FLRun:
     lr: float = 0.05
     seed: int = 0
     eval_batch: int = 512              # eval CHUNK size (full set is scored)
+    #: partial participation: sample this many clients per round (0 = all).
+    #: The population's Helios state persists across rounds; only the
+    #: sampled cohort trains, and §IV.C pace/volume adaptation runs over it.
+    participation: int = 0
+    #: cohort sampler: "uniform", or "time_weighted" (p ∝ 1/cycle_time, so
+    #: fast devices are drawn more often and the round critical path drops)
+    sampler: str = "uniform"
 
     def __post_init__(self):
         self.adapter = make_adapter(self.cfg)
@@ -139,6 +150,12 @@ class FLRun:
                                          self.cfg)
         self.opt = make_optimizer("momentum", self.lr)
         self.rng = np.random.default_rng(self.seed)
+        # participation draws live on their OWN stream: every engine
+        # (sequential / batched / sharded) reconstructs the identical
+        # schedule from the seed, and full-participation runs stay
+        # draw-for-draw unchanged when sampling is off
+        self.sample_rng = np.random.default_rng((self.seed, 0x5EED))
+        self.cohort_log: List[List[int]] = []
         self.history: List[dict] = []
         self.round = 0
         self._init_helios()
@@ -225,12 +242,43 @@ class FLRun:
     # ------------------------------------------------------------------
     # engines
     # ------------------------------------------------------------------
-    def _round_times(self) -> List[float]:
+    def _draw_cohort(self) -> List[int]:
+        """This round's participant indices (sorted, duplicate-free).
+
+        Full participation returns every client.  Sampling consumes ONE
+        ``sample_rng`` draw per round, so for a fixed seed every engine
+        reproduces the identical participant schedule.  ``time_weighted``
+        weights clients by inverse simulated cycle time at their CURRENT
+        volume — both engines evolve volumes with the same host arithmetic,
+        so the weights (and draws) also agree bit-for-bit.
+        """
+        n = len(self.clients)
+        k = self.participation
+        if not k or k >= n:
+            return list(range(n))
+        if self.sampler == "uniform":
+            p = None
+        elif self.sampler == "time_weighted":
+            # mirror _round_times exactly: syn trains everyone at full
+            # volume, so its weights must not see the soft-training volumes
+            t = np.asarray([cycle_time(c.profile,
+                                       c.volume if (self.scheme != "syn" and
+                                                    c.is_straggler) else 1.0)
+                            for c in self.clients])
+            w = 1.0 / np.maximum(t, 1e-9)
+            p = w / w.sum()
+        else:
+            raise ValueError(f"unknown sampler {self.sampler!r}")
+        idx = self.sample_rng.choice(n, size=k, replace=False, p=p)
+        return sorted(int(i) for i in idx)
+
+    def _round_times(self, clients: Optional[Sequence["Client"]] = None) \
+            -> List[float]:
         """Simulated wall time per client for one round (current volumes)."""
         return [cycle_time(c.profile,
                            c.volume if (self.scheme != "syn" and
                                         c.is_straggler) else 1.0)
-                for c in self.clients]
+                for c in (self.clients if clients is None else clients)]
 
     def _record_round(self, r: int, rounds: int, eval_every: int,
                       clock: float, loss: float, ratios: List[float]):
@@ -244,13 +292,23 @@ class FLRun:
                 "volumes": [c.volume for c in self.clients]})
 
     def run_sync(self, rounds: int, eval_every: int = 1) -> List[dict]:
-        """helios / st_only / random / syn."""
-        pace = _collab_pace(self.clients)
+        """helios / st_only / random / syn.
+
+        Each round trains only the drawn cohort (everyone under full
+        participation); unsampled clients keep their Helios state untouched.
+        The §IV.C collaboration pace is computed over the sampled cohort —
+        at full participation it equals the whole-fleet pace, so sampling
+        off reproduces the original trajectory exactly.
+        """
         clock = 0.0
         for r in range(rounds):
+            cohort = self._draw_cohort()
+            self.cohort_log.append(cohort)
+            cclients = [self.clients[i] for i in cohort]
+            pace = _collab_pace(cclients)
             results = []
-            times = self._round_times()
-            for c, t in zip(self.clients, times):
+            times = self._round_times(cclients)
+            for c, t in zip(cclients, times):
                 results.append(self._client_cycle(c, self.global_params))
                 # volume adaptation toward the collaboration pace (§IV.C)
                 if self.scheme == "helios" and c.is_straggler and \
@@ -273,6 +331,10 @@ class FLRun:
         """asyn / afo: event-driven, no waiting for stragglers."""
         clock = SimClock()
         snapshots = {0: self.global_params}
+        # bookkeeping exposed for tests/monitoring: the snapshot dict must
+        # stay bounded by cap + len(clients) and never evict a live anchor
+        self.snapshot_peak = 1
+        self.snapshot_anchor_misses = 0
         for c in self.clients:
             c.staleness_anchor = 0
             clock.schedule(cycle_time(c.profile, 1.0), c.cid)
@@ -304,6 +366,12 @@ class FLRun:
                         break
                     if k != agg_counter and k not in anchored:
                         del snapshots[k]
+                # eviction is the only step that could drop an anchor, so
+                # the invariant check stays off the no-eviction fast path
+                self.snapshot_anchor_misses += sum(
+                    cl.staleness_anchor not in snapshots
+                    for cl in self.clients)
+            self.snapshot_peak = max(self.snapshot_peak, len(snapshots))
             clock.schedule(cycle_time(c.profile, 1.0), cid)
             if not c.is_straggler:
                 done_fast += 1
@@ -384,31 +452,46 @@ class BatchedFLRun(FLRun):
         self._build_batched()
 
     # ------------------------------------------------------------------
+    def _get_cached_program(self, key, builder):
+        """LRU of compiled round programs; elastic churn (or per-draw cohort
+        shapes) returning to a recently-seen key pays no recompile, and keys
+        beyond ``round_cache_cap`` are evicted."""
+        if not hasattr(self, "_round_cache"):
+            self._round_cache = OrderedDict()
+        if key in self._round_cache:
+            self._round_cache.move_to_end(key)
+        else:
+            self._round_cache[key] = builder()
+            while len(self._round_cache) > self.round_cache_cap:
+                self._round_cache.popitem(last=False)
+        return self._round_cache[key]
+
+    def _get_round_fn(self, n_s: int, n_c: int):
+        return self._get_cached_program(
+            (n_s, n_c), lambda: jax.jit(self._make_round_fn(n_s, n_c)))
+
     def _build_batched(self):
         soft = self.scheme in ("helios", "st_only", "random")
         self._s_idx = [i for i, c in enumerate(self.clients)
                        if soft and c.is_straggler]
         self._c_idx = [i for i, c in enumerate(self.clients)
                        if not (soft and c.is_straggler)]
+        if self.participation:
+            # sampled cohorts change membership per round: per-client
+            # ``helios_state`` stays authoritative and each round stacks /
+            # unstacks just its cohort (_run_sync_sampled) — no persistent
+            # whole-fleet stacked state to fall out of sync
+            self._sstate = None
+            return
         # stacked[unperm] restores original client order for aggregation
         self._unperm = jnp.asarray(
             np.argsort(np.asarray(self._s_idx + self._c_idx)), jnp.int32)
         self._sstate = ST.stack_states(
             [self.clients[i].helios_state for i in self._s_idx]) \
             if self._s_idx else None
-        # LRU of compiled programs keyed by cohort shape; unperm is a traced
-        # arg, so elastic churn returning to a recently-seen (n_s, n_c) pays
-        # no recompile, and shapes beyond ``round_cache_cap`` are evicted
-        if not hasattr(self, "_round_cache"):
-            self._round_cache = OrderedDict()
-        key = (len(self._s_idx), len(self._c_idx))
-        if key in self._round_cache:
-            self._round_cache.move_to_end(key)
-        else:
-            self._round_cache[key] = jax.jit(self._make_round_fn(*key))
-            while len(self._round_cache) > self.round_cache_cap:
-                self._round_cache.popitem(last=False)
-        self._round_fn = self._round_cache[key]
+        # unperm is a traced arg, so programs depend only on (n_s, n_c)
+        self._round_fn = self._get_round_fn(len(self._s_idx),
+                                            len(self._c_idx))
 
     def _make_round_fn(self, n_s: int, n_c: int):
         adapter, opt = self.adapter, self.opt
@@ -483,9 +566,12 @@ class BatchedFLRun(FLRun):
         return stack(self._s_idx), stack(self._c_idx)
 
     def run_sync(self, rounds: int, eval_every: int = 1) -> List[dict]:
+        if self.participation:
+            return self._run_sync_sampled(rounds, eval_every)
         pace = _collab_pace(self.clients)
         clock = 0.0
         for r in range(rounds):
+            self.cohort_log.append(list(range(len(self.clients))))
             times = self._round_times()
             s_batch, c_batch = self._sample_cohort_batches()
             self.global_params, self._sstate, ratios, losses = \
@@ -509,6 +595,62 @@ class BatchedFLRun(FLRun):
         # keep per-client helios_state fresh so callers that snapshot
         # clients (checkpointing, inspection) never see round-0 state
         self.sync_client_states()
+        return self.history
+
+    def _run_sync_sampled(self, rounds: int, eval_every: int) -> List[dict]:
+        """Partial participation: each round stacks just the drawn cohort.
+
+        Per-client ``helios_state`` is the source of truth between rounds
+        (unsampled clients' state is literally untouched); the cohort's
+        straggler rows are stacked, run through the (n_s, n_c)-shaped round
+        program from the LRU cache, and unstacked back.  Batch draws consume
+        ``self.rng`` in cohort order — the same order as the sequential
+        engine's loop — so trajectories stay replay-equivalent.
+        """
+        soft = self.scheme in ("helios", "st_only", "random")
+        clock = 0.0
+        for r in range(rounds):
+            cohort = self._draw_cohort()
+            self.cohort_log.append(cohort)
+            cclients = [self.clients[i] for i in cohort]
+            pace = _collab_pace(cclients)
+            times = self._round_times(cclients)
+            s_pos = [j for j, c in enumerate(cclients)
+                     if soft and c.is_straggler]
+            c_pos = [j for j, c in enumerate(cclients)
+                     if not (soft and c.is_straggler)]
+            unperm = jnp.asarray(np.argsort(np.asarray(s_pos + c_pos)),
+                                 jnp.int32)
+            per = [self._sample_batches(c) for c in cclients]
+
+            def stack(pos):
+                if not pos:
+                    return None
+                return jax.tree.map(lambda *xs: jnp.stack(xs),
+                                    *[per[j] for j in pos])
+
+            sstate = ST.stack_states([cclients[j].helios_state
+                                      for j in s_pos]) if s_pos else None
+            round_fn = self._get_round_fn(len(s_pos), len(c_pos))
+            self.global_params, sstate, ratios, losses = round_fn(
+                self.global_params, sstate, stack(s_pos), stack(c_pos),
+                unperm)
+            if s_pos:
+                for j, st in zip(s_pos,
+                                 ST.unstack_states(sstate, len(s_pos))):
+                    cclients[j].helios_state = st
+            if self.scheme == "helios" and self.hcfg.adapt_volume:
+                for j in s_pos:
+                    c = cclients[j]
+                    c.volume = VOL.adapt_volume(c.volume, times[j], pace,
+                                                self.hcfg.adapt_gain,
+                                                self.hcfg.min_volume)
+                    c.helios_state = ST.set_volume(c.helios_state, c.volume)
+            clock += max(times)
+            self.round += 1
+            self._record_round(r, rounds, eval_every, clock,
+                               float(jnp.mean(losses)),
+                               np.asarray(ratios).astype(float).tolist())
         return self.history
 
     # ------------------------------------------------------------------
@@ -539,6 +681,208 @@ class BatchedFLRun(FLRun):
         self.sync_client_states()
         super().remove_client(cid)
         self._build_batched()
+
+
+@dataclasses.dataclass
+class ShardedFLRun(BatchedFLRun):
+    """Client-sharded round engine: the batched program, shard_mapped over a
+    1-D ``("clients",)`` device mesh (launch/mesh.make_client_mesh).
+
+    Population scale comes from three ingredients on top of
+    :class:`BatchedFLRun`:
+
+    * **Persistent population state** — every client's Helios state lives as
+      one row of a stacked pytree (``core.soft_train.init_population``, built
+      without materializing N per-client dicts).  Each round gathers the
+      sampled cohort's rows, runs them, and scatters them back; unsampled
+      rows are bit-untouched.
+    * **One shape-stable round program** — the cohort is padded to
+      ``ceil(K / devices) * devices`` slots (padding replicates the first
+      client's batch, gets zero aggregation weight, and never consumes host
+      RNG), and soft-training vs. capable clients are selected by a traced
+      per-slot flag instead of cohort splitting.  One compiled program
+      serves every draw: no recompiles across sampled cohorts.
+    * **Client-parallel execution** — inside shard_map each device vmaps
+      over its block of cohort rows; Eq. 10 / masked-mean aggregation is a
+      local weighted partial sum followed by a single cross-device psum over
+      the ``clients`` axis.
+
+    Same seed => same trajectory as FLRun/BatchedFLRun up to float
+    reduction-order error (the equivalence wall in
+    tests/test_sharded_engine.py pins all three engines together).
+    """
+
+    #: optional explicit device mesh with a ``clients`` axis; by default a
+    #: 1-D mesh over (at most cohort-size) visible devices is built lazily
+    mesh: Optional[Mesh] = None
+
+    # ------------------------------------------------------------------
+    def _init_helios(self):
+        # per-client dicts stay unmaterialized: the population state is
+        # built stacked in _build_batched (sync_client_states writes rows
+        # back on demand for checkpointing / elastic churn / async fallback)
+        pass
+
+    def _build_batched(self):
+        # _draw_cohort never returns more than the population, so clamp the
+        # slot count too — otherwise participation > N pads every round
+        # with zero-weight training slots
+        k = min(self.participation, len(self.clients)) or len(self.clients)
+        self._mesh = self.mesh if self.mesh is not None \
+            else make_client_mesh(k)
+        d = self._mesh.devices.size
+        self._kpad = -(-k // d) * d
+        # place the globals mesh-replicated up front: round 1 then sees the
+        # same input sharding the round program outputs, so the compile
+        # cache holds exactly ONE program from the first call on
+        self.global_params = jax.device_put(
+            self.global_params,
+            jax.sharding.NamedSharding(self._mesh, P()))
+        # the population state lives HOST-SIDE (numpy leaves): rounds gather
+        # K rows to device and scatter them back in place, so N never
+        # round-trips and the jit input signature is draw-invariant
+        if all(c.helios_state is None for c in self.clients):
+            self._pop_state = ST.host_states(ST.init_population(
+                self.adapter.schema, [c.volume for c in self.clients],
+                [c.cid for c in self.clients]))
+        else:
+            # elastic path: sync_client_states materialized fresh dicts
+            # before the client list changed — restack them
+            self._pop_state = ST.host_states(ST.stack_states(
+                [c.helios_state for c in self.clients]))
+        self._round_fn = self._get_cached_program(
+            ("sharded", self._kpad),
+            lambda: self._make_sharded_round_fn(self._kpad))
+
+    def sync_client_states(self) -> None:
+        """Materialize per-client ``helios_state`` views from the population
+        rows (checkpointing / inspection / elastic ops / async fallback)."""
+        for i, c in enumerate(self.clients):
+            c.helios_state = self.client_state(i)
+
+    def client_state(self, i: int) -> dict:
+        """Row ``i`` (client-list position) of the population state, as an
+        immutable device snapshot (host rows are mutated in place)."""
+        return jax.tree.map(lambda x: jnp.asarray(x[i]), self._pop_state)
+
+    # ------------------------------------------------------------------
+    def _make_sharded_round_fn(self, kpad: int):
+        adapter, opt = self.adapter, self.opt
+        hcfg, scheme = self.hcfg, self.scheme
+        schema = adapter.schema
+        hcfg_eff = _random_hcfg(hcfg) if scheme == "random" else hcfg
+        hcfg_end = hcfg_eff if scheme == "random" else hcfg
+        agg_mode = hcfg.aggregation if scheme == "helios" else "uniform"
+        ones_masks = {k: jnp.ones(s, jnp.float32) for k, s in schema.items()}
+        local_train = _make_local_train(adapter, opt)
+
+        def round_body(global_params, cstate, batches, is_soft, valid):
+            # block-local views: leading axis = kpad / n_devices rows
+            def one_client(st, b, soft_flag):
+                st_b = ST.begin_cycle(st, hcfg_eff)
+                masks = jax.tree.map(
+                    lambda m, o: jnp.where(soft_flag > 0, m, o),
+                    st_b["masks"], ones_masks)
+                p, loss = local_train(global_params, b, masks)
+                if scheme in ("helios", "st_only"):
+                    scores = adapter.cycle_scores(p, global_params)
+                else:                                      # random [12] / syn
+                    scores = st_b["scores"]
+                st_e = ST.end_cycle(st_b, scores, hcfg_end)
+                # capable (and padding) slots keep their state bit-identical:
+                # the discarded begin/end cycle never leaks back
+                new_st = jax.tree.map(
+                    lambda a, o: jnp.where(soft_flag > 0, a, o), st_e, st)
+                ratio = jnp.where(soft_flag > 0,
+                                  MK.selected_fraction(st_b["masks"]), 1.0)
+                return p, new_st, ratio, loss, masks
+
+            p, new_state, ratios, losses, masks = jax.vmap(one_client)(
+                cstate, batches, is_soft)
+            base = ratios if agg_mode != "uniform" else jnp.ones_like(ratios)
+            w = base * valid
+            a = w / jnp.maximum(jax.lax.psum(jnp.sum(w), "clients"), 1e-9)
+            if agg_mode == "masked_mean":
+                pmasks = adapter.expand_masks_batch(masks, global_params)
+                num = jax.tree.map(
+                    lambda m, t: jnp.sum(
+                        a.reshape((-1,) + (1,) * (t.ndim - 1)) * m
+                        * t.astype(jnp.float32), axis=0), pmasks, p)
+                den = jax.tree.map(
+                    lambda m: jnp.sum(
+                        a.reshape((-1,) + (1,) * (m.ndim - 1)) * m, axis=0),
+                    pmasks)
+                num, den = jax.lax.psum((num, den), "clients")
+                new_g = jax.tree.map(
+                    lambda g, nu, de: jnp.where(
+                        de > 0, nu / jnp.maximum(de, 1e-9),
+                        g.astype(jnp.float32)).astype(g.dtype),
+                    global_params, num, den)
+            else:
+                part = jax.tree.map(
+                    lambda t: jnp.tensordot(a, t.astype(jnp.float32),
+                                            axes=1), p)
+                part = jax.lax.psum(part, "clients")
+                new_g = jax.tree.map(lambda g, t: t.astype(g.dtype),
+                                     global_params, part)
+            return new_g, new_state, ratios, losses
+
+        # check_rep=False: remat checkpoint_name (transformer stacks) has no
+        # replication rule on current JAX; the psum above still leaves
+        # new_g replicated in practice
+        sharded = shard_map(
+            round_body, mesh=self._mesh,
+            in_specs=(P(), P("clients"), P("clients"), P("clients"),
+                      P("clients")),
+            out_specs=(P(), P("clients"), P("clients"), P("clients")),
+            check_rep=False)
+        return jax.jit(sharded)
+
+    # ------------------------------------------------------------------
+    def run_sync(self, rounds: int, eval_every: int = 1) -> List[dict]:
+        soft = self.scheme in ("helios", "st_only", "random")
+        clock = 0.0
+        for r in range(rounds):
+            cohort = self._draw_cohort()
+            self.cohort_log.append(cohort)
+            k, kpad = len(cohort), self._kpad
+            cclients = [self.clients[i] for i in cohort]
+            pace = _collab_pace(cclients)
+            times = self._round_times(cclients)
+            idx = np.asarray(cohort + [cohort[0]] * (kpad - k))
+            is_soft = jnp.asarray(
+                [1.0 if (soft and c.is_straggler) else 0.0
+                 for c in cclients] + [0.0] * (kpad - k), jnp.float32)
+            valid = jnp.asarray([1.0] * k + [0.0] * (kpad - k), jnp.float32)
+            batches = self.adapter.sample_cohort(
+                self.rng, self.train_data, [c.data_idx for c in cclients],
+                self.local_steps, self.batch_size, pad_to=kpad)
+            cstate = ST.gather_states_host(self._pop_state, idx)
+            self.global_params, new_cstate, ratios, losses = self._round_fn(
+                self.global_params, cstate, batches, is_soft, valid)
+            ST.scatter_states_host(
+                self._pop_state, cohort,
+                jax.tree.map(lambda x: x[:k], new_cstate))
+            if self.scheme == "helios" and self.hcfg.adapt_volume:
+                upd_idx, upd_vol = [], []
+                for j, c in enumerate(cclients):
+                    if c.is_straggler:
+                        c.volume = VOL.adapt_volume(
+                            c.volume, times[j], pace, self.hcfg.adapt_gain,
+                            self.hcfg.min_volume)
+                        upd_idx.append(cohort[j])
+                        upd_vol.append(c.volume)
+                if upd_idx:
+                    self._pop_state["volume"][np.asarray(upd_idx)] = \
+                        np.asarray(upd_vol, np.float32)
+            clock += max(times)
+            self.round += 1
+            if eval_every > 0:
+                self._record_round(
+                    r, rounds, eval_every, clock,
+                    float(np.mean(np.asarray(losses)[:k])),
+                    np.asarray(ratios)[:k].astype(float).tolist())
+        return self.history
 
 
 def setup_clients(profiles: Sequence[DeviceProfile],

@@ -90,7 +90,7 @@ def _runtime(cfg, shape, mesh) -> dict:
 
 def analyze(lowered, compiled, cfg, shape, mesh) -> dict:
     from repro.parallel.hlo_cost import pattern_bytes, weighted_cost
-    cost = compiled.cost_analysis() or {}
+    cost = HA.cost_analysis_dict(compiled)
     # trip-count-weighted re-walk of the HLO (lax.scan bodies count x trips;
     # XLA's cost_analysis counts them once — see parallel/hlo_cost.py)
     hlo_text = compiled.as_text()
@@ -124,6 +124,12 @@ def analyze(lowered, compiled, cfg, shape, mesh) -> dict:
             "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
             "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
         }
+        # newer jaxlib dropped peak_memory_in_bytes; the CPU backend's temp
+        # accounting is NOT a per-device HBM peak (it reports the whole
+        # unoptimized buffer set), so peak_bytes is only emitted when the
+        # backend reports a real peak — absent keys keep consumers'
+        # .get(key, default) semantics meaningful
+        mem_info = {k: v for k, v in mem_info.items() if v is not None}
     except Exception:                                      # CPU backend quirk
         mem_info = {}
     return {"roofline": rl.row(), "collectives": coll, "memory": mem_info,

@@ -11,6 +11,7 @@ from __future__ import annotations
 import os
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -25,6 +26,22 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_client_mesh(max_shards: int | None = None):
+    """1-D ``("clients",)`` mesh for the client-sharded FL engine.
+
+    Uses every visible device by default; ``max_shards`` caps the axis so a
+    small cohort doesn't spread one client per device and pad the rest (the
+    sharded engine pads the cohort up to a multiple of the axis size).
+    Validated on CPU via the ``REPRO_HOST_DEVICES``-forced host-device
+    pattern (tests/test_sharded_engine.py, benchmarks sharded_population).
+    """
+    devs = jax.devices()
+    n = len(devs)
+    if max_shards is not None:
+        n = max(1, min(n, max_shards))
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("clients",))
 
 
 def make_debug_mesh(n_devices: int | None = None, *, multi_pod: bool = False):

@@ -1,0 +1,161 @@
+"""Partial participation: schedule determinism, state persistence, rotation
+on rejoin, and async snapshot bookkeeping.
+
+A population's Helios state must be OWNED by the server across rounds: a
+client that sits out keeps masks/scores/skip_counts bit-identical, samplers
+reproduce the identical participant schedule from a fixed seed on every
+engine, and long-skipped units are forcibly rotated back in the next time
+their client is drawn.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CNNS, HeliosConfig, reduced
+from repro.data.federated import partition_iid, partition_iid_lazy
+from repro.data.synthetic import class_gaussian_images
+from repro.federated import (BatchedFLRun, FLRun, ShardedFLRun, make_fleet,
+                             setup_clients)
+
+
+@pytest.fixture(scope="module")
+def setting():
+    cfg = reduced(CNNS["lenet"])
+    imgs, labels = class_gaussian_images(800, cfg.image_size,
+                                         cfg.in_channels, cfg.num_classes,
+                                         seed=0)
+    ti, tl = class_gaussian_images(128, cfg.image_size, cfg.in_channels,
+                                   cfg.num_classes, seed=9)
+    parts = partition_iid(len(labels), 6, seed=0)
+    return cfg, {"images": imgs, "labels": labels}, \
+        {"images": ti, "labels": tl}, parts
+
+
+def _make(setting, cls, scheme="helios", n=6, **kw):
+    cfg, train, test, parts = setting
+    hcfg = HeliosConfig()
+    clients = setup_clients(make_fleet(n - n // 2, n // 2), parts, hcfg)
+    return cls(cfg, hcfg, scheme, clients, train, test,
+               local_steps=1, batch_size=8, lr=0.1, seed=0, eval_batch=64,
+               **kw)
+
+
+def _state_leaves(state):
+    return [np.asarray(x) for x in jax.tree.leaves(state)]
+
+
+@pytest.mark.parametrize("sampler", ["uniform", "time_weighted"])
+def test_identical_schedules_across_engines(setting, sampler):
+    """Fixed seed => the three engines draw the exact same cohorts."""
+    runs = [_make(setting, cls, participation=3, sampler=sampler)
+            for cls in (FLRun, BatchedFLRun, ShardedFLRun)]
+    for r in runs:
+        r.run_sync(4, eval_every=0)
+    assert runs[0].cohort_log == runs[1].cohort_log == runs[2].cohort_log
+    assert len(runs[0].cohort_log) == 4
+    assert all(len(c) == 3 for c in runs[0].cohort_log)
+    # and the sampled-population trajectories stay equivalent
+    a = runs[0].global_params
+    for other in runs[1:]:
+        diff = max(float(np.max(np.abs(np.asarray(x, np.float32)
+                                       - np.asarray(y, np.float32))))
+                   for x, y in zip(jax.tree.leaves(a),
+                                   jax.tree.leaves(other.global_params)))
+        assert diff < 1e-5
+
+
+def test_skipped_client_state_bit_identical(setting):
+    """A client that sits out R rounds keeps its whole Helios state
+    bit-for-bit — in both the batched (per-dict) and the sharded
+    (population-row) engines."""
+    for cls in (BatchedFLRun, ShardedFLRun):
+        run = _make(setting, cls, participation=2)
+        if cls is ShardedFLRun:
+            snap = [_state_leaves(run.client_state(i)) for i in range(6)]
+        else:
+            snap = [_state_leaves(c.helios_state) for c in run.clients]
+        for _ in range(3):
+            run.run_sync(1, eval_every=0)
+            sampled = set(run.cohort_log[-1])
+            for i in range(6):
+                cur = _state_leaves(run.client_state(i)
+                                    if cls is ShardedFLRun
+                                    else run.clients[i].helios_state)
+                if i not in sampled:
+                    for a, b in zip(snap[i], cur):
+                        np.testing.assert_array_equal(a, b)
+                snap[i] = cur
+
+
+def test_capable_rows_never_advance(setting):
+    """Capable clients flow through the sharded unified program with the
+    soft flag off: their population rows stay at cycle 0 with intact rng."""
+    run = _make(setting, ShardedFLRun, participation=4)
+    init = {i: _state_leaves(run.client_state(i)) for i in range(6)
+            if not run.clients[i].is_straggler}
+    run.run_sync(3, eval_every=0)
+    for i, leaves in init.items():
+        for a, b in zip(leaves, _state_leaves(run.client_state(i))):
+            np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("cls", [FLRun, ShardedFLRun])
+def test_forced_rotation_fires_on_rejoin(setting, cls):
+    """Units whose skip count crossed the rotation threshold while the
+    client sat out are forced back into training the round it rejoins."""
+    run = _make(setting, cls, participation=2)
+    sidx = next(i for i, c in enumerate(run.clients) if c.is_straggler)
+    # push ONE unit per row far over any threshold (1 + 1/P); forced sets
+    # smaller than the round(P*n) budget must preempt the draw outright
+    if cls is ShardedFLRun:
+        for v in run._pop_state["skip_counts"].values():
+            v[sidx, :, 0] = 1000                  # host rows mutate in place
+    else:
+        st = run.clients[sidx].helios_state
+        st["skip_counts"] = {k: v.at[:, 0].set(1000)
+                             for k, v in st["skip_counts"].items()}
+    for _ in range(12):
+        run.run_sync(1, eval_every=0)
+        if sidx in run.cohort_log[-1]:
+            break
+    else:
+        pytest.fail("straggler never sampled in 12 rounds")
+    state = run.client_state(sidx) if cls is ShardedFLRun \
+        else run.clients[sidx].helios_state
+    for k, m in state["masks"].items():
+        np.testing.assert_array_equal(np.asarray(m)[:, 0],
+                                      np.ones_like(np.asarray(m)[:, 0]))
+        # ...and the counters reset, so rotation regulation re-arms
+        assert int(np.max(np.asarray(state["skip_counts"][k])[:, 0])) == 0
+
+
+def test_lazy_parts_population(setting):
+    """A population set up from the lazy partition trains identically to
+    the eager one (index-for-index equal draws)."""
+    cfg, train, test, _ = setting
+    n = 8
+    hcfg = HeliosConfig()
+    n_items = len(train["labels"])
+    out = {}
+    for name, parts in (("eager", partition_iid(n_items, n, seed=1)),
+                        ("lazy", partition_iid_lazy(n_items, n, seed=1))):
+        clients = setup_clients(make_fleet(n - n // 2, n // 2),
+                                parts, hcfg)
+        run = ShardedFLRun(cfg, hcfg, "helios", clients, train, test,
+                           local_steps=1, batch_size=8, lr=0.1, seed=0,
+                           participation=3)
+        run.run_sync(2, eval_every=0)
+        out[name] = run.global_params
+    for a, b in zip(jax.tree.leaves(out["eager"]),
+                    jax.tree.leaves(out["lazy"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_snapshot_dict_bounded(setting):
+    """Straggler-heavy async run: the snapshot dict stays within
+    snapshot_cap + len(clients), and no live anchor is ever evicted."""
+    run = _make(setting, FLRun, scheme="afo")
+    run.run_async(24, snapshot_cap=2, eval_every=0)
+    assert run.snapshot_peak <= 2 + len(run.clients)
+    assert run.snapshot_anchor_misses == 0

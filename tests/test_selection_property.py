@@ -1,0 +1,90 @@
+"""Property-based tests for the Eq. 2 selection + rotation regulation.
+
+Randomized sweeps over (rows, units, volume, P_s, forced sets, PRNG seeds)
+pin the selection invariants the engines rely on:
+
+* masks are EXACTLY 0/1 (the masked training path multiplies by them);
+* every row selects exactly ``clip(round(P*n), 1, n)`` units — the traced
+  count the adaptive volume controller assumes;
+* forced (rotation-regulated) units preempt the draw whenever they fit in
+  the budget — "pull the long-term skipped neurons back to training";
+* the auto rotation threshold 1 + 1/P is monotone in 1/P.
+
+Requires hypothesis (importorskip, like tests/test_theory_property.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import selection as S
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+SHAPES = st.tuples(st.integers(1, 3), st.integers(2, 48))
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=SHAPES,
+       volume=st.floats(0.05, 1.0),
+       p_s=st.floats(0.0, 1.0),
+       forced_frac=st.floats(0.0, 1.0),
+       seed=st.integers(0, 2 ** 16))
+def test_masks_binary_and_exact_count(shape, volume, p_s, forced_frac,
+                                      seed):
+    L, n = shape
+    rng = np.random.default_rng(seed)
+    scores = {"u": jnp.asarray(rng.normal(size=(L, n)), jnp.float32)}
+    nf = int(round(forced_frac * n))
+    f = np.zeros((L, n), bool)
+    f[:, :nf] = True
+    masks = S.select_masks(scores, {"u": jnp.asarray(f)},
+                           jnp.float32(volume), p_s,
+                           jax.random.PRNGKey(seed))
+    m = np.asarray(masks["u"])
+    assert set(np.unique(m)) <= {0.0, 1.0}
+    k_total = int(np.clip(round(volume * n), 1, n))
+    np.testing.assert_array_equal(m.sum(axis=1),
+                                  np.full(L, k_total, np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=SHAPES,
+       volume=st.floats(0.05, 1.0),
+       p_s=st.floats(0.0, 1.0),
+       seed=st.integers(0, 2 ** 16),
+       data=st.data())
+def test_forced_units_always_selected(shape, volume, p_s, seed, data):
+    """Any forced set that fits in the round(P*n) budget is fully selected,
+    no matter how low its contribution scores."""
+    L, n = shape
+    k_total = int(np.clip(round(volume * n), 1, n))
+    nf = data.draw(st.integers(0, k_total))
+    rng = np.random.default_rng(seed)
+    scores = {"u": jnp.asarray(rng.normal(size=(L, n)), jnp.float32)}
+    f = np.zeros((L, n), bool)
+    # forced units get the WORST scores: selection must still take them
+    order = np.argsort(np.asarray(scores["u"]), axis=1)
+    for r in range(L):
+        f[r, order[r, :nf]] = True
+    masks = S.select_masks(scores, {"u": jnp.asarray(f)},
+                           jnp.float32(volume), p_s,
+                           jax.random.PRNGKey(seed))
+    m = np.asarray(masks["u"])
+    assert np.all(m[f] == 1.0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(v1=st.floats(1e-3, 1.0), v2=st.floats(1e-3, 1.0))
+def test_rotation_threshold_monotone_in_inverse_volume(v1, v2):
+    """threshold = 1 + 1/P: a smaller volume always implies an equal or
+    larger rotation threshold (slower forced rotation for tiny submodels)."""
+    lo, hi = sorted([v1, v2])
+    t_lo = float(S.rotation_threshold(jnp.float32(lo)))
+    t_hi = float(S.rotation_threshold(jnp.float32(hi)))
+    assert t_lo >= t_hi
+    assert t_hi >= 2.0 - 1e-5                     # 1 + 1/P >= 2 for P <= 1
+    # fixed mode ignores the volume entirely
+    assert float(S.rotation_threshold(jnp.float32(lo), auto=False,
+                                      fixed=7)) == 7.0
