@@ -19,9 +19,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import CNNS, HeliosConfig, reduced
-from repro.data.federated import partition_iid, partition_noniid
+from repro.data.federated import (partition_iid, partition_noniid,
+                                  partition_noniid_lazy)
 from repro.data.synthetic import class_gaussian_images
-from repro.federated import BatchedFLRun, FLRun, make_fleet, setup_clients
+from repro.federated import (AsyncFLRun, BatchedFLRun, FLRun, make_fleet,
+                             setup_clients)
 
 ROWS = []
 
@@ -386,6 +388,86 @@ def table_sharded_population(devices=(1, 2, 4, 8, 16),
 
 
 # ---------------------------------------------------------------------------
+# async events: sequential event loop vs bucketed AsyncFLRun, events/sec
+# ---------------------------------------------------------------------------
+
+
+def table_async_events(model="lenet", counts=(64, 256, 1024),
+                       capable_per_client=1.0,
+                       out_path="BENCH_async_events.json"):
+    """Events/sec for the async schemes (afo), half-straggler fleets.
+
+    The sequential reference dispatches one jitted client cycle + a
+    host-dict snapshot per completion event — O(events) host overhead.
+    The bucketed engine executes each equal-time tie-group as ONE vmapped
+    program reading/writing a device snapshot ring, so host dispatch is
+    O(buckets).  Both engines process the IDENTICAL event set for a fixed
+    seed (tests/test_async_engine.py pins the trajectories), which makes
+    events/sec an apples-to-apples execution-layer number.  Data partitions
+    are lazy non-IID (partition_noniid_lazy): no N per-client index arrays.
+    """
+    import json
+
+    cfg = reduced(CNNS[model])
+    noise = _NOISE.get(model, 4.0)
+    imgs, labels = class_gaussian_images(
+        4096, cfg.image_size, cfg.in_channels, cfg.num_classes, seed=0,
+        noise=noise)
+    ti, tl = class_gaussian_images(
+        128, cfg.image_size, cfg.in_channels, cfg.num_classes, seed=99,
+        noise=noise)
+    train, test = {"images": imgs, "labels": labels}, \
+        {"images": ti, "labels": tl}
+    hcfg = HeliosConfig()
+    run_kw = dict(local_steps=1, batch_size=16, lr=0.05, seed=0)
+    results = []
+    for n in counts:
+        parts = partition_noniid_lazy(labels, n, shards_per_client=4,
+                                      seed=0)
+        capable = max(16, int(n * capable_per_client))
+        row = {"clients": n, "capable_cycles": capable}
+        for name, cls in (("sequential", FLRun), ("bucketed", AsyncFLRun)):
+            clients = setup_clients(make_fleet(n - n // 2, n // 2), parts,
+                                    hcfg)
+            run = cls(cfg, hcfg, "afo", clients, train, test, **run_kw)
+            # warmup over the SAME capable budget: the event schedule is
+            # deterministic from t=0, so this visits exactly the bucket
+            # shapes the timed window will, compiling all of them up front
+            run.run_async(capable, eval_every=0)
+            jax.block_until_ready(run.global_params)
+            t0 = time.perf_counter()
+            run.run_async(capable, eval_every=0)
+            jax.block_until_ready(run.global_params)
+            dt = time.perf_counter() - t0
+            row[name] = {"events": run.events_processed,
+                         "seconds": dt,
+                         "events_per_sec": run.events_processed / dt}
+            if name == "bucketed":
+                progs = run.bucket_programs()
+                # shape-stable: one compile per padded bucket size
+                assert all(v == 1 for v in progs.values()), progs
+                row[name]["bucket_programs"] = {str(k): v
+                                                for k, v in progs.items()}
+                row[name]["mean_bucket"] = float(np.mean(run.bucket_sizes))
+        row["speedup"] = (row["bucketed"]["events_per_sec"]
+                          / row["sequential"]["events_per_sec"])
+        emit(f"async_events/{model}/{n}clients/sequential",
+             1e6 / row["sequential"]["events_per_sec"],
+             f"events_per_sec={row['sequential']['events_per_sec']:.1f}")
+        emit(f"async_events/{model}/{n}clients/bucketed",
+             1e6 / row["bucketed"]["events_per_sec"],
+             f"events_per_sec={row['bucketed']['events_per_sec']:.1f};"
+             f"speedup_vs_sequential={row['speedup']:.2f}x;"
+             f"mean_bucket={row['bucketed']['mean_bucket']:.1f}")
+        results.append(row)
+    with open(out_path, "w") as f:
+        json.dump({"model": model, "scheme": "afo",
+                   "partition": "noniid_lazy", **run_kw,
+                   "results": results}, f, indent=2)
+    print(f"wrote {out_path}")
+
+
+# ---------------------------------------------------------------------------
 # kernels: wall time + oracle error (CPU interpret)
 # ---------------------------------------------------------------------------
 
@@ -464,6 +546,7 @@ TABLES = {
     "batched": table_batched_rounds,
     "federated_lm": table_federated_lm,
     "sharded_population": table_sharded_population,
+    "async_events": table_async_events,
     "kernels": bench_kernels,
     "softtrain": bench_softtrain_flops,
 }
@@ -489,6 +572,8 @@ def main() -> None:
             fn(counts=(4,), rounds=2, ce_rounds=2)
         elif args.quick and name == "sharded_population":
             fn(devices=(1, 16), populations=(256,), rounds=4)
+        elif args.quick and name == "async_events":
+            fn(counts=(64,), capable_per_client=0.5)
         else:
             fn()
     print(f"\n{len(ROWS)} rows")

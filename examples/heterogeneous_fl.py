@@ -10,6 +10,11 @@ as one jitted vmapped program instead of a per-client Python loop:
 
   PYTHONPATH=src python examples/heterogeneous_fl.py --clients 128 \
       --engine batched --rounds 5
+
+With ``--engine batched`` the async schemes (asyn / afo) also leave the
+sequential event loop: BatchedFLRun inherits the bucketed event engine
+(equal-time completions execute as one vmapped program — see
+examples/async_events.py for the dedicated walkthrough).
 """
 import argparse
 import time

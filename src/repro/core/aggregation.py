@@ -19,6 +19,7 @@ from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def alpha_weights(ratios: Sequence[float]) -> jnp.ndarray:
@@ -135,12 +136,168 @@ def staleness_weight(staleness: int, a: float = 0.5) -> float:
     return float((staleness + 1.0) ** (-a))
 
 
+def staleness_weights(staleness: jax.Array, a=0.5) -> jax.Array:
+    """Vectorized :func:`staleness_weight` — traced inside the bucketed
+    async program so per-event AFO discounts cost no host round-trip."""
+    return (staleness.astype(jnp.float32) + 1.0) ** (-a)
+
+
 def mix(global_params, client_params, weight: float):
     """Async mixing: theta <- (1-w) theta + w theta_client (AFO/Asyn paths)."""
     return jax.tree.map(
         lambda g, c: ((1 - weight) * g.astype(jnp.float32)
                       + weight * c.astype(jnp.float32)).astype(g.dtype),
         global_params, client_params)
+
+
+def mix_bucket(global_params, stacked_params, weights):
+    """Sequentially :func:`mix` a bucket of client params into the global.
+
+    ``stacked_params`` leaves carry a leading (B,) event axis; ``weights``
+    is the (B,) per-event mixing weight (already staleness-discounted /
+    zeroed on padding slots).  The fold runs in bucket order under one
+    ``lax.scan`` — exactly the event-loop semantics, traced as one program
+    instead of B host dispatches.  ``w_i = 0`` leaves the global untouched.
+    """
+    def step(g, x):
+        p, w = x
+        g = jax.tree.map(
+            lambda gg, pp: ((1 - w) * gg.astype(jnp.float32)
+                            + w * pp.astype(jnp.float32)).astype(gg.dtype),
+            g, p)
+        return g, None
+
+    g, _ = jax.lax.scan(step, global_params, (stacked_params, weights))
+    return g
+
+
+def mix_bucket_ring(global_params, ring_params, slots, stacked_params,
+                    weights):
+    """:func:`mix_bucket` that also snapshots every intermediate global.
+
+    After event i's mix the new global is written to ring row ``slots[i]``
+    (a :class:`SnapshotRing` buffer) — the device-side replacement for the
+    per-event Python-dict snapshot the sequential async loop keeps.  Point
+    a padding slot at the ring's scratch row: its weight is 0, so it writes
+    back an unchanged global nobody reads.  Returns (global, ring_params).
+    """
+    def step(carry, x):
+        g, ring = carry
+        p, w, s = x
+        g = jax.tree.map(
+            lambda gg, pp: ((1 - w) * gg.astype(jnp.float32)
+                            + w * pp.astype(jnp.float32)).astype(gg.dtype),
+            g, p)
+        ring = jax.tree.map(lambda r, gg: r.at[s].set(gg), ring, g)
+        return (g, ring), None
+
+    (g, ring), _ = jax.lax.scan(step, (global_params, ring_params),
+                                (stacked_params, weights, slots))
+    return g, ring
+
+
+# ---------------------------------------------------------------------------
+# snapshot ring buffer (bucketed async engine)
+# ---------------------------------------------------------------------------
+
+
+class RingAllocator:
+    """Anchor-aware slot allocator for a fixed ring of snapshot rows.
+
+    Host-side bookkeeping only (the rows themselves live in
+    :class:`SnapshotRing`).  Each snapshot is identified by its aggregation
+    id (the global mix counter at creation); clients "anchor" the id they
+    last pulled from via retain/release refcounts.  Allocation reuses the
+    oldest slot with refcount 0 — so a live anchor is NEVER evicted, the
+    invariant the sequential engine's dict eviction maintains by scanning.
+    The last slot is reserved scratch (padding writes land there).
+    """
+
+    def __init__(self, slots: int):
+        assert slots >= 2, "need at least one data slot + scratch"
+        self.slots = slots
+        self._slot_agg = np.full(slots, -1, np.int64)
+        self._refcnt = np.zeros(slots, np.int64)
+        self._agg_slot: Dict[int, int] = {}
+        self.anchor_misses = 0
+        self.peak_live = 0
+
+    @property
+    def scratch(self) -> int:
+        return self.slots - 1
+
+    def seed(self, agg: int, slot: int = 0) -> None:
+        """Install the initial snapshot id into a slot."""
+        self._slot_agg[slot] = agg
+        self._agg_slot[agg] = slot
+
+    def slot_of(self, agg: int) -> int:
+        s = self._agg_slot.get(agg)
+        if s is None:
+            # an anchored snapshot was evicted — the invariant the
+            # allocator exists to uphold; surface loudly
+            self.anchor_misses += 1
+            raise KeyError(f"snapshot {agg} evicted while still anchored")
+        return s
+
+    def retain(self, agg: int) -> None:
+        self._refcnt[self.slot_of(agg)] += 1
+        self.peak_live = max(self.peak_live,
+                             int(np.count_nonzero(self._refcnt)))
+
+    def release(self, agg: int) -> None:
+        s = self.slot_of(agg)
+        assert self._refcnt[s] > 0, f"release of unanchored snapshot {agg}"
+        self._refcnt[s] -= 1
+
+    def alloc(self, agg: int) -> int:
+        """Slot for a NEW snapshot ``agg``: the oldest unanchored data slot
+        (never scratch, never a slot some client still reads through)."""
+        free = np.where(self._refcnt[:-1] == 0)[0]
+        if free.size == 0:
+            raise RuntimeError(
+                f"snapshot ring full: all {self.slots - 1} data slots are "
+                "anchored (ring must be sized >= live anchors + 1)")
+        s = int(free[np.argmin(self._slot_agg[free])])
+        old = int(self._slot_agg[s])
+        if old >= 0:
+            del self._agg_slot[old]
+        self._slot_agg[s] = agg
+        self._agg_slot[agg] = s
+        return s
+
+    def live_slots(self) -> int:
+        return int(np.count_nonzero(self._refcnt))
+
+
+class SnapshotRing:
+    """Device-side stacked snapshot store for the bucketed async engine.
+
+    ``params`` is one pytree whose leaves carry a leading (slots,) axis —
+    row r holds the global params as of some aggregation step.  Reads are a
+    traced ``jnp.take`` over the bucket's anchor rows and writes happen
+    inside the bucket program (:func:`mix_bucket_ring`), so per-event
+    snapshotting never leaves the device.  Slot lifetime is managed by the
+    host-side :class:`RingAllocator`; capacity is ``max(cap, anchors + 1)``
+    data slots + 1 scratch, which by construction bounds the store the same
+    way the sequential dict bounds itself (cap + live anchors).
+    """
+
+    def __init__(self, params, cap: int, n_anchors: int):
+        self.alloc = RingAllocator(max(cap, n_anchors + 1) + 1)
+        self.params = jax.tree.map(
+            lambda x: jnp.zeros((self.alloc.slots,) + x.shape,
+                                x.dtype).at[0].set(x), params)
+        self.alloc.seed(0, slot=0)
+
+    @property
+    def scratch(self) -> int:
+        return self.alloc.scratch
+
+    def read(self, agg: int):
+        """Materialize snapshot ``agg`` (tests / inspection)."""
+        s = self.alloc.slot_of(agg)
+        return jax.tree.map(lambda x: x[s], self.params)
 
 
 def aggregate(cfg_mode: str, global_params, client_params,

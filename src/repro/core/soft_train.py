@@ -29,10 +29,16 @@ from repro.core import contribution as C
 from repro.core import selection as S
 
 
+def full_masks(schema: Dict[str, tuple]) -> Dict[str, jax.Array]:
+    """All-ones unit masks — the 'train the whole model' selection shared
+    by capable clients, the syn/asyn/afo baselines, and padding slots."""
+    return {k: jnp.ones(s, jnp.float32) for k, s in schema.items()}
+
+
 def init_state(schema: Dict[str, tuple], volume: float = 1.0,
                seed: int = 0) -> dict:
     return {
-        "masks": {k: jnp.ones(s, jnp.float32) for k, s in schema.items()},
+        "masks": full_masks(schema),
         "scores": S.init_scores(schema),
         "skip_counts": S.init_skip_counts(schema),
         "volume": jnp.asarray(volume, jnp.float32),

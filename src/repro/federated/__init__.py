@@ -1,11 +1,16 @@
 from repro.federated.adapter import (CNNAdapter, FamilyAdapter,
                                      TokenLMAdapter, make_adapter)
-from repro.federated.heterogeneity import (CAPABLE, TABLE_I, SimClock,
-                                           cycle_time, make_fleet)
-from repro.federated.runtime import (BatchedFLRun, Client, FLRun,
+from repro.federated.events import (ArrivalProcess, BernoulliDropout,
+                                    DropoutProcess, Event, JitteredArrival,
+                                    SimClock)
+from repro.federated.heterogeneity import (CAPABLE, TABLE_I, cycle_time,
+                                           make_fleet)
+from repro.federated.runtime import (AsyncFLRun, BatchedFLRun, Client, FLRun,
                                      ShardedFLRun, setup_clients)
 
-__all__ = ["FLRun", "BatchedFLRun", "ShardedFLRun", "Client",
+__all__ = ["FLRun", "AsyncFLRun", "BatchedFLRun", "ShardedFLRun", "Client",
            "setup_clients", "make_fleet",
-           "cycle_time", "SimClock", "TABLE_I", "CAPABLE",
+           "cycle_time", "SimClock", "Event", "TABLE_I", "CAPABLE",
+           "ArrivalProcess", "JitteredArrival", "DropoutProcess",
+           "BernoulliDropout",
            "FamilyAdapter", "CNNAdapter", "TokenLMAdapter", "make_adapter"]

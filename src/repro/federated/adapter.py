@@ -84,10 +84,12 @@ class FamilyAdapter:
         """Per-client batches drawn in cohort order, stacked along a leading
         client axis.
 
-        Padding slots (up to ``pad_to``, for shard-divisible cohort shapes)
-        replicate the first client's draw WITHOUT consuming the host RNG, so
-        the sharded engine stays draw-for-draw equivalent to the sequential
-        one; the engine gives padding slots zero aggregation weight.
+        Padding slots (up to ``pad_to``: shard-divisible cohort shapes for
+        the sharded engine, power-of-two event buckets for the async
+        engine) replicate the first client's draw WITHOUT consuming the
+        host RNG, so the padded engines stay draw-for-draw equivalent to
+        the sequential references; engines give padding slots zero
+        aggregation/mixing weight.
         """
         per = [self.sample_batch(rng, data, idx, local_steps, batch_size)
                for idx in idx_seq]

@@ -13,10 +13,12 @@ a capable reference device (~8.2 min/cycle), matching Fig. 1's 2.3h -> 7.7h
 from __future__ import annotations
 
 import dataclasses
-import heapq
-from typing import List, Optional
+from typing import List
 
 from repro.core.identification import DeviceProfile
+# canonical home moved to the discrete-event core; re-exported for callers
+# that still import the clock from here
+from repro.federated.events import SimClock  # noqa: F401
 
 #: paper Table I: 4 straggler settings running AlexNet on CIFAR-10.
 #: (compute workload GFLOPS, memory usage MB, time cost min)
@@ -49,24 +51,3 @@ def make_fleet(num_capable: int, num_stragglers: int) -> List[DeviceProfile]:
 def cycle_time(profile: DeviceProfile, volume: float = 1.0,
                base: float = 1.0) -> float:
     return base * profile.speed_factor * max(volume, 1e-3)
-
-
-class SimClock:
-    """Event-driven simulated clock for the async engines."""
-
-    def __init__(self):
-        self.now = 0.0
-        self._q: list = []
-        self._n = 0
-
-    def schedule(self, delay: float, payload) -> None:
-        heapq.heappush(self._q, (self.now + delay, self._n, payload))
-        self._n += 1
-
-    def pop(self):
-        t, _, payload = heapq.heappop(self._q)
-        self.now = t
-        return payload
-
-    def empty(self) -> bool:
-        return not self._q

@@ -10,28 +10,36 @@
   st_only  — Helios soft-training WITHOUT the Eq. 10 aggregation
              optimization (the §VII.C ablation)
 
-Time is simulated (heterogeneity.cycle_time); the metric is real (models
-train on real arrays).  The engines are FAMILY-BLIND: everything that varies
-by model family — batch sampling/shapes, eval metric, cycle-score reduction,
-parameter-space mask expansion — lives behind federated.adapter.FamilyAdapter,
-so the same engines federate the CNN testbed and the token-stream LM families
-(dense / moe / ssm / hybrid).  Train/test data are dicts of aligned arrays
-keyed like the model's batch (``{"images", "labels"}`` or ``{"tokens"}``),
-indexed along axis 0 by example.
+Time is simulated (federated.events / heterogeneity.cycle_time); the metric
+is real (models train on real arrays).  The engines are FAMILY-BLIND:
+everything that varies by model family lives behind
+federated.adapter.FamilyAdapter, so the same engines federate the CNN
+testbed and the token-stream LM families.  Train/test data are dicts of
+aligned arrays keyed like the model's batch, indexed along axis 0.
 
-Two sync engines share the reference semantics (also mirrored by the
-datacenter pjit path, launch/train.py):
+The engine matrix (one execution strategy per row, same semantics per
+column):
 
-* :class:`FLRun` — the sequential reference: a Python loop re-dispatching
-  ``_local_train`` per client.  Simple, but the host loop caps the simulated
-  population size.
-* :class:`BatchedFLRun` — the batched engine: per-client Helios state is
-  stacked into one pytree with a leading client axis and the WHOLE round
-  (begin_cycle -> masked local training -> cycle_scores/end_cycle ->
-  aggregation) runs as one jitted program, vmapped over each cohort
-  (soft-training stragglers vs. full-model capable clients, so mask
-  selection stays uniform within a vmapped batch).  Same seed => same
-  trajectory as FLRun up to batched-reduction float error.
+  * :class:`FLRun` — the sequential reference for BOTH timing models: the
+    sync loop re-dispatches ``_local_train`` per client, and ``run_async``
+    processes one completion event at a time with Python-dict snapshots.
+    Simple, but host dispatch caps the simulated population size.
+  * :class:`AsyncFLRun` — the bucketed async engine: the deterministic
+    event core (federated.events) pops buckets of near-simultaneous
+    completions and each bucket runs as ONE jitted program (vmapped local
+    training from a device-side snapshot ring + staleness-weighted mixing
+    scan).  Same seed => same trajectory as ``FLRun.run_async``.
+  * :class:`BatchedFLRun` — the batched sync engine: a whole round
+    (begin_cycle -> masked training -> end_cycle -> aggregation) as one
+    jitted vmapped program per cohort.  Inherits the bucketed async path.
+  * :class:`ShardedFLRun` — the batched round program shard_mapped over a
+    1-D ``("clients",)`` device mesh with host-resident population state.
+
+All four sync loops share ONE host protocol — the template method
+:meth:`FLRun.run_sync` (draw cohort -> pace -> times -> train -> volume
+adaptation -> record); engines override the ``_train_cohort`` /
+``_write_volumes`` / ``_finish_sync`` hooks, never the loop, so the
+cross-engine equivalence contract is stated in exactly one place.
 """
 from __future__ import annotations
 
@@ -54,17 +62,20 @@ from repro.core import volume as VOL
 from repro.core.identification import (DeviceProfile, identify_resource_based,
                                        identify_time_based)
 from repro.federated.adapter import FamilyAdapter, make_adapter
-from repro.federated.heterogeneity import SimClock, cycle_time
+from repro.federated.events import (ArrivalProcess, DropoutProcess, Event,
+                                    SimClock)
+from repro.federated.heterogeneity import cycle_time
 from repro.launch.mesh import make_client_mesh
 from repro.models import init_params
 from repro.optim import apply_updates, make_optimizer
 
 
 def _make_local_train(adapter: FamilyAdapter, opt):
-    """E masked local SGD steps under lax.scan — the one training loop both
-    engines share (sequential jits it directly; batched vmaps it per cohort,
-    which keeps the two engines numerically in lock-step).  ``batches`` is a
-    dict pytree whose leaves carry a leading (local_steps,) axis."""
+    """E masked local SGD steps under lax.scan — the one training loop all
+    engines share (sequential jits it directly; batched/async engines vmap
+    it per cohort/bucket, which keeps the engines numerically in
+    lock-step).  ``batches`` is a dict pytree whose leaves carry a leading
+    (local_steps,) axis."""
 
     def local_train(params, batches, masks):
         opt_state = opt.init(params)
@@ -87,7 +98,7 @@ def _make_local_train(adapter: FamilyAdapter, opt):
 
 def _random_hcfg(hcfg: HeliosConfig) -> HeliosConfig:
     """Caldas et al. [12] baseline: pure random selection, no top-k /
-    rotation.  Shared by both engines so the baseline stays one definition."""
+    rotation.  Shared by all engines so the baseline stays one definition."""
     return dataclasses.replace(hcfg, p_s=0.0, rotation_threshold_auto=False,
                                rotation_threshold=10 ** 9)
 
@@ -116,7 +127,7 @@ class Client:
     volume: float = 1.0
     helios_state: Optional[dict] = None
     is_straggler: bool = False
-    staleness_anchor: int = 0          # round the client last pulled from
+    staleness_anchor: int = 0          # agg step the client last pulled from
 
 
 @dataclasses.dataclass
@@ -141,6 +152,15 @@ class FLRun:
     #: cohort sampler: "uniform", or "time_weighted" (p ∝ 1/cycle_time, so
     #: fast devices are drawn more often and the round critical path drops)
     sampler: str = "uniform"
+    #: async event processes (federated.events): completion-delay jitter and
+    #: per-event update loss.  None = the deterministic Table-I cost model.
+    #: Both engines call them once per event in pop order, so a fixed seed
+    #: still gives engine-identical trajectories.
+    arrival: Optional[ArrivalProcess] = None
+    dropout: Optional[DropoutProcess] = None
+    #: max distinct compiled programs kept per engine (round shapes, bucket
+    #: shapes); least-recently-used programs are evicted beyond this
+    round_cache_cap: int = 8
 
     def __post_init__(self):
         self.adapter = make_adapter(self.cfg)
@@ -171,6 +191,20 @@ class FLRun:
         self._local_train = jax.jit(_make_local_train(self.adapter, self.opt))
         self._eval_chunk = jax.jit(self.adapter.eval_chunk)
 
+    def _get_cached_program(self, key, builder):
+        """LRU of compiled programs; elastic churn (or per-draw cohort /
+        bucket shapes) returning to a recently-seen key pays no recompile,
+        and keys beyond ``round_cache_cap`` are evicted."""
+        if not hasattr(self, "_round_cache"):
+            self._round_cache = OrderedDict()
+        if key in self._round_cache:
+            self._round_cache.move_to_end(key)
+        else:
+            self._round_cache[key] = builder()
+            while len(self._round_cache) > self.round_cache_cap:
+                self._round_cache.popitem(last=False)
+        return self._round_cache[key]
+
     # ------------------------------------------------------------------
     def _sample_batches(self, client: Client) -> dict:
         return self.adapter.sample_batch(self.rng, self.train_data,
@@ -180,8 +214,7 @@ class FLRun:
     def _client_masks(self, client: Client) -> dict:
         if self.scheme in ("helios", "st_only", "random") and client.is_straggler:
             return client.helios_state["masks"]
-        return {k: jnp.ones(s, jnp.float32)
-                for k, s in self.adapter.schema.items()}
+        return ST.full_masks(self.adapter.schema)
 
     def _client_cycle(self, client: Client, base_params):
         """One local training cycle; returns (new_params, masks, ratio)."""
@@ -240,7 +273,7 @@ class FLRun:
         return total / max(weight, 1e-9)
 
     # ------------------------------------------------------------------
-    # engines
+    # shared per-round host protocol (the sync template method)
     # ------------------------------------------------------------------
     def _draw_cohort(self) -> List[int]:
         """This round's participant indices (sorted, duplicate-free).
@@ -249,7 +282,7 @@ class FLRun:
         ``sample_rng`` draw per round, so for a fixed seed every engine
         reproduces the identical participant schedule.  ``time_weighted``
         weights clients by inverse simulated cycle time at their CURRENT
-        volume — both engines evolve volumes with the same host arithmetic,
+        volume — all engines evolve volumes with the same host arithmetic,
         so the weights (and draws) also agree bit-for-bit.
         """
         n = len(self.clients)
@@ -282,7 +315,7 @@ class FLRun:
 
     def _record_round(self, r: int, rounds: int, eval_every: int,
                       clock: float, loss: float, ratios: List[float]):
-        """History bookkeeping shared by both sync engines; eval_every=0
+        """History bookkeeping shared by all sync engines; eval_every=0
         disables evaluation/history entirely (pure-throughput benchmarks)."""
         if eval_every > 0 and (r % eval_every == 0 or r == rounds - 1):
             self.history.append({
@@ -292,13 +325,16 @@ class FLRun:
                 "volumes": [c.volume for c in self.clients]})
 
     def run_sync(self, rounds: int, eval_every: int = 1) -> List[dict]:
-        """helios / st_only / random / syn.
+        """helios / st_only / random / syn — the ONE sync host loop.
 
-        Each round trains only the drawn cohort (everyone under full
-        participation); unsampled clients keep their Helios state untouched.
-        The §IV.C collaboration pace is computed over the sampled cohort —
-        at full participation it equals the whole-fleet pace, so sampling
-        off reproduces the original trajectory exactly.
+        Template method: every engine runs this exact per-round protocol
+        (draw cohort -> §IV.C pace -> simulated times -> engine-specific
+        ``_train_cohort`` -> volume adaptation -> clock/record) and only
+        overrides the hooks.  Each round trains only the drawn cohort
+        (everyone under full participation); unsampled clients keep their
+        Helios state untouched.  The pace is computed over the sampled
+        cohort — at full participation it equals the whole-fleet pace, so
+        sampling off reproduces the original trajectory exactly.
         """
         clock = 0.0
         for r in range(rounds):
@@ -306,44 +342,97 @@ class FLRun:
             self.cohort_log.append(cohort)
             cclients = [self.clients[i] for i in cohort]
             pace = _collab_pace(cclients)
-            results = []
             times = self._round_times(cclients)
-            for c, t in zip(cclients, times):
-                results.append(self._client_cycle(c, self.global_params))
-                # volume adaptation toward the collaboration pace (§IV.C)
-                if self.scheme == "helios" and c.is_straggler and \
-                        self.hcfg.adapt_volume:
-                    c.volume = VOL.adapt_volume(c.volume, t, pace,
-                                                self.hcfg.adapt_gain,
-                                                self.hcfg.min_volume)
-                    c.helios_state = ST.set_volume(c.helios_state, c.volume)
-            self._aggregate(results)
+            losses, ratios = self._train_cohort(cohort, cclients)
+            self._adapt_volumes(cohort, cclients, times, pace)
             clock += max(times)
             self.round += 1
             self._record_round(r, rounds, eval_every, clock,
-                               float(np.mean([x[3] for x in results])),
-                               [float(x[2]) for x in results])
+                               float(np.mean(np.asarray(losses))),
+                               [float(x) for x in np.asarray(ratios)])
+        self._finish_sync()
         return self.history
+
+    # -- engine hooks ---------------------------------------------------
+    def _train_cohort(self, cohort: List[int], cclients: List[Client]):
+        """Train the drawn cohort against the current global params and
+        aggregate; returns per-client (losses, ratios) in cohort order.
+        The sequential reference: one re-dispatched ``_local_train`` per
+        client, consuming ``self.rng`` in cohort order (the draw order
+        every other engine replays)."""
+        results = [self._client_cycle(c, self.global_params)
+                   for c in cclients]
+        self._aggregate(results)
+        return [x[3] for x in results], [x[2] for x in results]
+
+    def _adapt_volumes(self, cohort: List[int], cclients: List[Client],
+                       times: List[float], pace: float) -> None:
+        """Volume adaptation toward the collaboration pace (§IV.C) — host
+        arithmetic shared verbatim by every engine; only the state
+        write-back (``_write_volumes``) is engine-specific."""
+        if self.scheme != "helios" or not self.hcfg.adapt_volume:
+            return
+        upd = [j for j, c in enumerate(cclients) if c.is_straggler]
+        for j in upd:
+            c = cclients[j]
+            c.volume = VOL.adapt_volume(c.volume, times[j], pace,
+                                        self.hcfg.adapt_gain,
+                                        self.hcfg.min_volume)
+        if upd:
+            self._write_volumes(cohort, cclients, upd)
+
+    def _write_volumes(self, cohort: List[int], cclients: List[Client],
+                       upd: List[int]) -> None:
+        for j in upd:
+            cclients[j].helios_state = ST.set_volume(
+                cclients[j].helios_state, cclients[j].volume)
+
+    def _finish_sync(self) -> None:
+        pass
+
+    # ------------------------------------------------------------------
+    # async (event-driven) reference engine
+    # ------------------------------------------------------------------
+    def _next_delay(self, client: Client) -> float:
+        """Delay until this client's next completion — the Table-I cost
+        model, optionally perturbed by the pluggable arrival process."""
+        base = cycle_time(client.profile, 1.0)
+        return self.arrival.delay(client.cid, base) if self.arrival else base
+
+    def _reset_async_processes(self) -> None:
+        for p in (self.arrival, self.dropout):
+            if p is not None:
+                p.reset(self.seed)
 
     def run_async(self, capable_cycles: int, mix_weight: float = 0.5,
                   staleness_a: float = 0.5, eval_every: int = 1,
                   snapshot_cap: int = 64) -> List[dict]:
-        """asyn / afo: event-driven, no waiting for stragglers."""
+        """asyn / afo reference: one un-jitted client cycle per completion
+        event, Python-dict snapshots.  :class:`AsyncFLRun` reproduces this
+        trajectory with bucketed device execution."""
         clock = SimClock()
+        self._reset_async_processes()
         snapshots = {0: self.global_params}
         # bookkeeping exposed for tests/monitoring: the snapshot dict must
         # stay bounded by cap + len(clients) and never evict a live anchor
         self.snapshot_peak = 1
         self.snapshot_anchor_misses = 0
+        self.events_processed = 0
+        self.events_dropped = 0
         for c in self.clients:
             c.staleness_anchor = 0
-            clock.schedule(cycle_time(c.profile, 1.0), c.cid)
+            clock.schedule(self._next_delay(c), c.cid)
         done_fast = 0
         agg_counter = 0
         by_id = {c.cid: c for c in self.clients}
         while done_fast < capable_cycles and not clock.empty():
             cid = clock.pop()
             c = by_id[cid]
+            if self.dropout is not None and self.dropout.drops(cid):
+                self.events_dropped += 1
+                clock.schedule(self._next_delay(c) * self.dropout.penalty,
+                               cid)
+                continue
             # anchors are never evicted (below), so this lookup cannot fall
             # back to the current global params and mislabel staleness
             base = snapshots[c.staleness_anchor]
@@ -372,7 +461,8 @@ class FLRun:
                     cl.staleness_anchor not in snapshots
                     for cl in self.clients)
             self.snapshot_peak = max(self.snapshot_peak, len(snapshots))
-            clock.schedule(cycle_time(c.profile, 1.0), cid)
+            clock.schedule(self._next_delay(c), cid)
+            self.events_processed += 1
             if not c.is_straggler:
                 done_fast += 1
                 if eval_every > 0 and done_fast % eval_every == 0:
@@ -381,6 +471,7 @@ class FLRun:
                         "time": clock.now,
                         self.adapter.metric_name: self.evaluate(),
                         "loss": loss, "staleness": stale})
+        self.agg_counter = agg_counter
         return self.history
 
     # ------------------------------------------------------------------
@@ -417,13 +508,211 @@ class FLRun:
         self.clients = [c for c in self.clients if c.cid != cid]
 
 
-class BatchedFLRun(FLRun):
-    """Batched round engine: one jitted vmapped program per round.
+@dataclasses.dataclass
+class AsyncFLRun(FLRun):
+    """Bucketed event-driven engine for the async schemes (asyn / afo).
 
-    Per-client Helios soft-training state (masks, scores, skip_counts,
-    volume, rng, cycle) is stacked along a leading client axis.  Clients are
-    split into two COHORTS so every control decision inside the traced
-    program is uniform:
+    The sequential ``run_async`` dispatches one un-jitted client cycle per
+    completion event from a Python dict of full-model snapshots — host
+    overhead O(events), which caps the population size the simulator can
+    reach.  This engine keeps the event semantics bit-compatible but
+    executes them in bulk:
+
+    * the deterministic event core (:class:`federated.events.SimClock`)
+      pops a BUCKET of near-simultaneous completions per step (with the
+      default ``bucket_horizon=0.0`` a bucket is exactly one equal-time
+      tie-group, which provably cannot reorder events vs. the sequential
+      loop — a client's next completion is strictly later than its
+      current one);
+    * every client in the bucket trains from its own anchor snapshot, read
+      as a traced gather out of a device-side stacked **snapshot ring
+      buffer** (:class:`core.aggregation.SnapshotRing`) — anchors predate
+      the bucket, so the whole bucket's local training runs under ONE
+      ``jax.vmap``;
+    * the per-event mixing θ ← (1-w)θ + w θ_c (staleness-discounted for
+      afo) folds over the bucket in event order inside the same program
+      (:func:`core.aggregation.mix_bucket_ring`), writing each post-mix
+      global into the ring slot the completing client re-anchors to;
+    * buckets are padded to the next power of two (padding replicates slot
+      0's batch without consuming host RNG, mixes at weight 0, and writes
+      to the ring's scratch row), so at most log2(max_bucket)+1 programs
+      are ever compiled — one per bucket-shape signature.
+
+    Batch draws, arrival/dropout process draws, snapshot anchoring, and
+    mixing order all replay the sequential reference exactly: for a fixed
+    seed the two engines produce the same GLOBAL-PARAM trajectory up to
+    vmapped-reduction float error (tests/test_async_engine.py).  History
+    is the one deliberate divergence: the sequential loop records at every
+    eval_every-th capable completion (possibly mid-tie-group), while this
+    engine records at most once per bucket, after the bucket's mixes.
+    """
+
+    #: bucket events within this much virtual time of the earliest pending
+    #: one.  0.0 = exact tie-groups (sequential-equivalent); > 0 trades
+    #: exactness for bigger buckets (the clock advances per bucket).
+    bucket_horizon: float = 0.0
+    #: cap on events per bucket (bounds the vmapped program's memory)
+    max_bucket: int = 128
+
+    def _make_bucket_fn(self, bpad: int):
+        adapter, opt = self.adapter, self.opt
+        ones_masks = ST.full_masks(adapter.schema)
+        local_train = _make_local_train(adapter, opt)
+        afo = self.scheme == "afo"
+
+        def bucket_fn(global_params, ring_params, base_slots, write_slots,
+                      batches, stale, valid, mix_w, stale_a):
+            base = jax.tree.map(lambda x: jnp.take(x, base_slots, axis=0),
+                                ring_params)
+            trained, losses = jax.vmap(
+                lambda bp, b: local_train(bp, b, ones_masks))(base, batches)
+            w = jnp.full((bpad,), 1.0, jnp.float32) * mix_w
+            if afo:
+                w = w * AG.staleness_weights(stale, stale_a)
+            w = w * valid
+            new_global, new_ring = AG.mix_bucket_ring(
+                global_params, ring_params, write_slots, trained, w)
+            return new_global, new_ring, losses
+
+        return bucket_fn
+
+    def _get_bucket_fn(self, bpad: int):
+        """Bucket programs get their OWN cache, not the round-program LRU:
+        pow2 padding bounds the key set at log2(max_bucket)+1, and sharing
+        the LRU would let a sync round key evict bucket programs (and vice
+        versa) into a silent recompile-per-revisit thrash."""
+        if not hasattr(self, "_bucket_cache"):
+            self._bucket_cache: Dict[int, object] = {}
+        if bpad not in self._bucket_cache:
+            # donate globals + ring: both are dead in the caller the moment
+            # the call returns (immediately reassigned), and without
+            # donation every bucket would copy the whole N+1-snapshot ring
+            self._bucket_cache[bpad] = jax.jit(self._make_bucket_fn(bpad),
+                                               donate_argnums=(0, 1))
+        return self._bucket_cache[bpad]
+
+    def bucket_programs(self) -> Dict[int, int]:
+        """{padded bucket size: jit cache size} — the equivalence wall and
+        the bench assert every value is 1 (no per-bucket retraces)."""
+        return {bpad: fn._cache_size() for bpad, fn in
+                getattr(self, "_bucket_cache", {}).items()}
+
+    def run_async(self, capable_cycles: int, mix_weight: float = 0.5,
+                  staleness_a: float = 0.5, eval_every: int = 1,
+                  snapshot_cap: int = 64) -> List[dict]:
+        if self.scheme not in ("asyn", "afo"):
+            # soft-training schemes need per-event mask selection and
+            # helios_state evolution — only the sequential reference
+            # implements that event-by-event; the bucket program trains
+            # full models (the asyn/afo semantics)
+            return super().run_async(capable_cycles, mix_weight,
+                                     staleness_a, eval_every, snapshot_cap)
+        clock = SimClock()
+        self._reset_async_processes()
+        n = len(self.clients)
+        by_id = {c.cid: c for c in self.clients}
+        ring = AG.SnapshotRing(self.global_params, snapshot_cap, n)
+        for c in self.clients:
+            c.staleness_anchor = 0
+            ring.alloc.retain(0)
+            clock.schedule(self._next_delay(c), c.cid)
+        self.agg_counter = 0
+        self.events_processed = 0
+        self.events_dropped = 0
+        self.bucket_sizes: List[int] = []
+        done_fast = 0
+        next_rec = eval_every if eval_every > 0 else 0
+        while done_fast < capable_cycles and not clock.empty():
+            evs = clock.pop_bucket(self.bucket_horizon, self.max_bucket)
+            # dropout draws + capable-budget truncation, in event order —
+            # the sequential loop stops mid-tie-group when the budget runs
+            # out, so the bucket must cut at the same event and put the
+            # unprocessed tail back on the heap untouched
+            exec_evs: List[Event] = []
+            drop_cids = set()
+            budget = capable_cycles - done_fast
+            cut = None
+            for i, ev in enumerate(evs):
+                if self.dropout is not None and self.dropout.drops(ev.cid):
+                    drop_cids.add(ev.cid)
+                    continue
+                exec_evs.append(ev)
+                if not by_id[ev.cid].is_straggler:
+                    budget -= 1
+                    if budget == 0:
+                        cut = i + 1
+                        break
+            handled = evs if cut is None else evs[:cut]
+            for ev in evs[len(handled):]:
+                clock.schedule_at(ev.time, ev.cid)
+            b = len(exec_evs)
+            losses = stales = None
+            if b:
+                bpad = 1 << (b - 1).bit_length()
+                # per-event batch draws in pop order — bit-identical rng
+                # consumption to the sequential loop; padding replicates
+                # slot 0 without touching the stream (PR 3's cohort seam)
+                batches = self.adapter.sample_cohort(
+                    self.rng, self.train_data,
+                    [by_id[ev.cid].data_idx for ev in exec_evs],
+                    self.local_steps, self.batch_size, pad_to=bpad)
+                agg0 = self.agg_counter
+                base_slots, write_slots, stales = [], [], []
+                for i, ev in enumerate(exec_evs):
+                    c = by_id[ev.cid]
+                    base_slots.append(ring.alloc.slot_of(c.staleness_anchor))
+                    stales.append(agg0 + i - c.staleness_anchor)
+                    new_agg = agg0 + i + 1
+                    ring.alloc.release(c.staleness_anchor)
+                    write_slots.append(ring.alloc.alloc(new_agg))
+                    ring.alloc.retain(new_agg)
+                    c.staleness_anchor = new_agg
+                self.agg_counter = agg0 + b
+                pad = bpad - b
+                bucket_fn = self._get_bucket_fn(bpad)
+                self.global_params, ring.params, losses = bucket_fn(
+                    self.global_params, ring.params,
+                    jnp.asarray(base_slots + [0] * pad, jnp.int32),
+                    jnp.asarray(write_slots + [ring.scratch] * pad,
+                                jnp.int32),
+                    batches,
+                    jnp.asarray(stales + [0] * pad, jnp.float32),
+                    jnp.asarray([1.0] * b + [0.0] * pad, jnp.float32),
+                    float(mix_weight), float(staleness_a))
+                self.events_processed += b
+                self.bucket_sizes.append(b)
+                done_fast += sum(1 for ev in exec_evs
+                                 if not by_id[ev.cid].is_straggler)
+            # reschedule every handled event in event order (arrival-stream
+            # parity with the sequential reference; each process owns its
+            # rng, so drop draws above never perturb these)
+            for ev in handled:
+                delay = self._next_delay(by_id[ev.cid])
+                if ev.cid in drop_cids:
+                    delay *= self.dropout.penalty
+                clock.schedule_at(ev.time + delay, ev.cid)
+            self.events_dropped += len(drop_cids)
+            if next_rec and b and done_fast >= next_rec:
+                self.history.append({
+                    "scheme": self.scheme, "cycle": done_fast,
+                    "time": clock.now,
+                    self.adapter.metric_name: self.evaluate(),
+                    "loss": float(np.mean(np.asarray(losses)[:b])),
+                    "staleness": float(np.mean(stales)),
+                    "bucket": b})
+                next_rec = (done_fast // eval_every + 1) * eval_every
+        self.snapshot_peak = ring.alloc.peak_live
+        self.snapshot_anchor_misses = ring.alloc.anchor_misses
+        return self.history
+
+
+class BatchedFLRun(AsyncFLRun):
+    """Batched sync engine: one jitted vmapped program per round.
+
+    Per-client Helios state (masks, scores, skip_counts, volume, rng,
+    cycle) is stacked along a leading client axis.  Clients are split into
+    two COHORTS so every control decision inside the traced program is
+    uniform:
 
       * soft-training stragglers — begin_cycle (batched PRNG split + Eq. 2
         selection) -> masked local training (lax.scan over steps) ->
@@ -432,40 +721,20 @@ class BatchedFLRun(FLRun):
 
     Both cohorts and the Eq. 10 / masked-mean aggregation trace into a
     SINGLE compiled round program, so host-loop dispatch overhead is O(1)
-    per round instead of O(clients).  Host-side pieces stay host-side, in
-    the same order as the sequential reference: batch sampling consumes
-    ``self.rng`` client-by-client and the §IV.C volume controller runs on
-    simulated wall times — which keeps the two engines trajectory-equivalent
-    for a fixed seed (up to batched-reduction float error).
+    per round instead of O(clients).  Host-side pieces run through the
+    shared template-method protocol in the same order as the sequential
+    reference — which keeps the engines trajectory-equivalent for a fixed
+    seed (up to batched-reduction float error).
 
-    The async schemes (asyn / afo) are inherently event-driven and fall back
-    to the sequential engine.
+    The async schemes run on the inherited bucketed event engine
+    (:class:`AsyncFLRun`) — no sequential fallback.
     """
-
-    #: max distinct (n_s, n_c) cohort shapes kept compiled; elastic churn
-    #: across many shapes evicts least-recently-used programs instead of
-    #: growing the cache without bound
-    round_cache_cap: int = 8
 
     def __post_init__(self):
         super().__post_init__()
         self._build_batched()
 
     # ------------------------------------------------------------------
-    def _get_cached_program(self, key, builder):
-        """LRU of compiled round programs; elastic churn (or per-draw cohort
-        shapes) returning to a recently-seen key pays no recompile, and keys
-        beyond ``round_cache_cap`` are evicted."""
-        if not hasattr(self, "_round_cache"):
-            self._round_cache = OrderedDict()
-        if key in self._round_cache:
-            self._round_cache.move_to_end(key)
-        else:
-            self._round_cache[key] = builder()
-            while len(self._round_cache) > self.round_cache_cap:
-                self._round_cache.popitem(last=False)
-        return self._round_cache[key]
-
     def _get_round_fn(self, n_s: int, n_c: int):
         return self._get_cached_program(
             (n_s, n_c), lambda: jax.jit(self._make_round_fn(n_s, n_c)))
@@ -479,8 +748,8 @@ class BatchedFLRun(FLRun):
         if self.participation:
             # sampled cohorts change membership per round: per-client
             # ``helios_state`` stays authoritative and each round stacks /
-            # unstacks just its cohort (_run_sync_sampled) — no persistent
-            # whole-fleet stacked state to fall out of sync
+            # unstacks just its cohort (_train_cohort_sampled) — no
+            # persistent whole-fleet stacked state to fall out of sync
             self._sstate = None
             return
         # stacked[unperm] restores original client order for aggregation
@@ -496,10 +765,9 @@ class BatchedFLRun(FLRun):
     def _make_round_fn(self, n_s: int, n_c: int):
         adapter, opt = self.adapter, self.opt
         hcfg, scheme = self.hcfg, self.scheme
-        schema = adapter.schema
         hcfg_eff = _random_hcfg(hcfg) if scheme == "random" else hcfg
         agg_mode = hcfg.aggregation if scheme == "helios" else "uniform"
-        ones_masks = {k: jnp.ones(s, jnp.float32) for k, s in schema.items()}
+        ones_masks = ST.full_masks(adapter.schema)
         local_train = _make_local_train(adapter, opt)
 
         def round_fn(global_params, sstate, s_batch, c_batch, unperm):
@@ -565,95 +833,78 @@ class BatchedFLRun(FLRun):
 
         return stack(self._s_idx), stack(self._c_idx)
 
-    def run_sync(self, rounds: int, eval_every: int = 1) -> List[dict]:
+    # -- template hooks -------------------------------------------------
+    def _train_cohort(self, cohort: List[int], cclients: List[Client]):
         if self.participation:
-            return self._run_sync_sampled(rounds, eval_every)
-        pace = _collab_pace(self.clients)
-        clock = 0.0
-        for r in range(rounds):
-            self.cohort_log.append(list(range(len(self.clients))))
-            times = self._round_times()
-            s_batch, c_batch = self._sample_cohort_batches()
-            self.global_params, self._sstate, ratios, losses = \
-                self._round_fn(self.global_params, self._sstate,
-                               s_batch, c_batch, self._unperm)
-            if self.scheme == "helios" and self.hcfg.adapt_volume and \
-                    self._s_idx:
-                vols = []
-                for i in self._s_idx:
-                    c = self.clients[i]
-                    c.volume = VOL.adapt_volume(c.volume, times[i], pace,
-                                                self.hcfg.adapt_gain,
-                                                self.hcfg.min_volume)
-                    vols.append(c.volume)
-                self._sstate = ST.set_volumes(self._sstate, vols)
-            clock += max(times)
-            self.round += 1
-            self._record_round(r, rounds, eval_every, clock,
-                               float(jnp.mean(losses)),
-                               np.asarray(ratios).astype(float).tolist())
-        # keep per-client helios_state fresh so callers that snapshot
-        # clients (checkpointing, inspection) never see round-0 state
-        self.sync_client_states()
-        return self.history
+            return self._train_cohort_sampled(cohort, cclients)
+        s_batch, c_batch = self._sample_cohort_batches()
+        self.global_params, self._sstate, ratios, losses = \
+            self._round_fn(self.global_params, self._sstate,
+                           s_batch, c_batch, self._unperm)
+        return np.asarray(losses), np.asarray(ratios)
 
-    def _run_sync_sampled(self, rounds: int, eval_every: int) -> List[dict]:
-        """Partial participation: each round stacks just the drawn cohort.
+    def _train_cohort_sampled(self, cohort: List[int],
+                              cclients: List[Client]):
+        """Partial participation: stack just the drawn cohort.
 
         Per-client ``helios_state`` is the source of truth between rounds
         (unsampled clients' state is literally untouched); the cohort's
         straggler rows are stacked, run through the (n_s, n_c)-shaped round
-        program from the LRU cache, and unstacked back.  Batch draws consume
-        ``self.rng`` in cohort order — the same order as the sequential
-        engine's loop — so trajectories stay replay-equivalent.
+        program from the LRU cache, and unstacked back.  Batch draws
+        consume ``self.rng`` in cohort order — the same order as the
+        sequential engine's loop — so trajectories stay replay-equivalent.
         """
         soft = self.scheme in ("helios", "st_only", "random")
-        clock = 0.0
-        for r in range(rounds):
-            cohort = self._draw_cohort()
-            self.cohort_log.append(cohort)
-            cclients = [self.clients[i] for i in cohort]
-            pace = _collab_pace(cclients)
-            times = self._round_times(cclients)
-            s_pos = [j for j, c in enumerate(cclients)
-                     if soft and c.is_straggler]
-            c_pos = [j for j, c in enumerate(cclients)
-                     if not (soft and c.is_straggler)]
-            unperm = jnp.asarray(np.argsort(np.asarray(s_pos + c_pos)),
-                                 jnp.int32)
-            per = [self._sample_batches(c) for c in cclients]
+        s_pos = [j for j, c in enumerate(cclients)
+                 if soft and c.is_straggler]
+        c_pos = [j for j, c in enumerate(cclients)
+                 if not (soft and c.is_straggler)]
+        unperm = jnp.asarray(np.argsort(np.asarray(s_pos + c_pos)),
+                             jnp.int32)
+        per = [self._sample_batches(c) for c in cclients]
 
-            def stack(pos):
-                if not pos:
-                    return None
-                return jax.tree.map(lambda *xs: jnp.stack(xs),
-                                    *[per[j] for j in pos])
+        def stack(pos):
+            if not pos:
+                return None
+            return jax.tree.map(lambda *xs: jnp.stack(xs),
+                                *[per[j] for j in pos])
 
-            sstate = ST.stack_states([cclients[j].helios_state
-                                      for j in s_pos]) if s_pos else None
-            round_fn = self._get_round_fn(len(s_pos), len(c_pos))
-            self.global_params, sstate, ratios, losses = round_fn(
-                self.global_params, sstate, stack(s_pos), stack(c_pos),
-                unperm)
-            if s_pos:
-                for j, st in zip(s_pos,
-                                 ST.unstack_states(sstate, len(s_pos))):
-                    cclients[j].helios_state = st
-            if self.scheme == "helios" and self.hcfg.adapt_volume:
-                for j in s_pos:
-                    c = cclients[j]
-                    c.volume = VOL.adapt_volume(c.volume, times[j], pace,
-                                                self.hcfg.adapt_gain,
-                                                self.hcfg.min_volume)
-                    c.helios_state = ST.set_volume(c.helios_state, c.volume)
-            clock += max(times)
-            self.round += 1
-            self._record_round(r, rounds, eval_every, clock,
-                               float(jnp.mean(losses)),
-                               np.asarray(ratios).astype(float).tolist())
-        return self.history
+        sstate = ST.stack_states([cclients[j].helios_state
+                                  for j in s_pos]) if s_pos else None
+        round_fn = self._get_round_fn(len(s_pos), len(c_pos))
+        self.global_params, sstate, ratios, losses = round_fn(
+            self.global_params, sstate, stack(s_pos), stack(c_pos), unperm)
+        if s_pos:
+            for j, st in zip(s_pos, ST.unstack_states(sstate, len(s_pos))):
+                cclients[j].helios_state = st
+        return np.asarray(losses), np.asarray(ratios)
+
+    def _write_volumes(self, cohort: List[int], cclients: List[Client],
+                       upd: List[int]) -> None:
+        if self.participation:
+            super()._write_volumes(cohort, cclients, upd)
+        elif self._s_idx:
+            self._sstate = ST.set_volumes(
+                self._sstate, [self.clients[i].volume for i in self._s_idx])
+
+    def _finish_sync(self) -> None:
+        # keep per-client helios_state fresh so callers that snapshot
+        # clients (checkpointing, inspection) never see round-0 state
+        if not self.participation:
+            self.sync_client_states()
 
     # ------------------------------------------------------------------
+    def run_async(self, *args, **kwargs) -> List[dict]:
+        if self.scheme in ("asyn", "afo"):
+            return super().run_async(*args, **kwargs)      # bucketed engine
+        # soft schemes delegate to the sequential event loop (via the
+        # AsyncFLRun guard), which mutates per-client helios_state:
+        # materialize it from the stacked/population state, run, restack
+        self.sync_client_states()
+        hist = super().run_async(*args, **kwargs)
+        self._build_batched()
+        return hist
+
     def sync_client_states(self) -> None:
         """Write the stacked cohort state back into per-client
         ``helios_state`` (for checkpointing / inspection / elastic ops)."""
@@ -662,13 +913,6 @@ class BatchedFLRun(FLRun):
                              ST.unstack_states(self._sstate,
                                                len(self._s_idx))):
                 self.clients[i].helios_state = st
-
-    def run_async(self, *args, **kwargs) -> List[dict]:
-        # event-driven: no fixed cohort to batch — sequential fallback
-        self.sync_client_states()
-        hist = super().run_async(*args, **kwargs)
-        self._build_batched()
-        return hist
 
     def add_client(self, profile: DeviceProfile, data_idx: np.ndarray,
                    white_box: bool = True) -> Client:
@@ -720,7 +964,7 @@ class ShardedFLRun(BatchedFLRun):
     def _init_helios(self):
         # per-client dicts stay unmaterialized: the population state is
         # built stacked in _build_batched (sync_client_states writes rows
-        # back on demand for checkpointing / elastic churn / async fallback)
+        # back on demand for checkpointing / elastic churn / inspection)
         pass
 
     def _build_batched(self):
@@ -756,7 +1000,7 @@ class ShardedFLRun(BatchedFLRun):
 
     def sync_client_states(self) -> None:
         """Materialize per-client ``helios_state`` views from the population
-        rows (checkpointing / inspection / elastic ops / async fallback)."""
+        rows (checkpointing / inspection / elastic ops)."""
         for i, c in enumerate(self.clients):
             c.helios_state = self.client_state(i)
 
@@ -769,11 +1013,10 @@ class ShardedFLRun(BatchedFLRun):
     def _make_sharded_round_fn(self, kpad: int):
         adapter, opt = self.adapter, self.opt
         hcfg, scheme = self.hcfg, self.scheme
-        schema = adapter.schema
         hcfg_eff = _random_hcfg(hcfg) if scheme == "random" else hcfg
         hcfg_end = hcfg_eff if scheme == "random" else hcfg
         agg_mode = hcfg.aggregation if scheme == "helios" else "uniform"
-        ones_masks = {k: jnp.ones(s, jnp.float32) for k, s in schema.items()}
+        ones_masks = ST.full_masks(adapter.schema)
         local_train = _make_local_train(adapter, opt)
 
         def round_body(global_params, cstate, batches, is_soft, valid):
@@ -838,51 +1081,33 @@ class ShardedFLRun(BatchedFLRun):
             check_rep=False)
         return jax.jit(sharded)
 
-    # ------------------------------------------------------------------
-    def run_sync(self, rounds: int, eval_every: int = 1) -> List[dict]:
+    # -- template hooks -------------------------------------------------
+    def _train_cohort(self, cohort: List[int], cclients: List[Client]):
         soft = self.scheme in ("helios", "st_only", "random")
-        clock = 0.0
-        for r in range(rounds):
-            cohort = self._draw_cohort()
-            self.cohort_log.append(cohort)
-            k, kpad = len(cohort), self._kpad
-            cclients = [self.clients[i] for i in cohort]
-            pace = _collab_pace(cclients)
-            times = self._round_times(cclients)
-            idx = np.asarray(cohort + [cohort[0]] * (kpad - k))
-            is_soft = jnp.asarray(
-                [1.0 if (soft and c.is_straggler) else 0.0
-                 for c in cclients] + [0.0] * (kpad - k), jnp.float32)
-            valid = jnp.asarray([1.0] * k + [0.0] * (kpad - k), jnp.float32)
-            batches = self.adapter.sample_cohort(
-                self.rng, self.train_data, [c.data_idx for c in cclients],
-                self.local_steps, self.batch_size, pad_to=kpad)
-            cstate = ST.gather_states_host(self._pop_state, idx)
-            self.global_params, new_cstate, ratios, losses = self._round_fn(
-                self.global_params, cstate, batches, is_soft, valid)
-            ST.scatter_states_host(
-                self._pop_state, cohort,
-                jax.tree.map(lambda x: x[:k], new_cstate))
-            if self.scheme == "helios" and self.hcfg.adapt_volume:
-                upd_idx, upd_vol = [], []
-                for j, c in enumerate(cclients):
-                    if c.is_straggler:
-                        c.volume = VOL.adapt_volume(
-                            c.volume, times[j], pace, self.hcfg.adapt_gain,
-                            self.hcfg.min_volume)
-                        upd_idx.append(cohort[j])
-                        upd_vol.append(c.volume)
-                if upd_idx:
-                    self._pop_state["volume"][np.asarray(upd_idx)] = \
-                        np.asarray(upd_vol, np.float32)
-            clock += max(times)
-            self.round += 1
-            if eval_every > 0:
-                self._record_round(
-                    r, rounds, eval_every, clock,
-                    float(np.mean(np.asarray(losses)[:k])),
-                    np.asarray(ratios)[:k].astype(float).tolist())
-        return self.history
+        k, kpad = len(cohort), self._kpad
+        idx = np.asarray(cohort + [cohort[0]] * (kpad - k))
+        is_soft = jnp.asarray(
+            [1.0 if (soft and c.is_straggler) else 0.0
+             for c in cclients] + [0.0] * (kpad - k), jnp.float32)
+        valid = jnp.asarray([1.0] * k + [0.0] * (kpad - k), jnp.float32)
+        batches = self.adapter.sample_cohort(
+            self.rng, self.train_data, [c.data_idx for c in cclients],
+            self.local_steps, self.batch_size, pad_to=kpad)
+        cstate = ST.gather_states_host(self._pop_state, idx)
+        self.global_params, new_cstate, ratios, losses = self._round_fn(
+            self.global_params, cstate, batches, is_soft, valid)
+        ST.scatter_states_host(
+            self._pop_state, cohort,
+            jax.tree.map(lambda x: x[:k], new_cstate))
+        return np.asarray(losses)[:k], np.asarray(ratios)[:k]
+
+    def _write_volumes(self, cohort: List[int], cclients: List[Client],
+                       upd: List[int]) -> None:
+        self._pop_state["volume"][np.asarray([cohort[j] for j in upd])] = \
+            np.asarray([cclients[j].volume for j in upd], np.float32)
+
+    def _finish_sync(self) -> None:
+        pass                # population rows ARE the authoritative state
 
 
 def setup_clients(profiles: Sequence[DeviceProfile],

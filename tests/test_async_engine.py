@@ -1,0 +1,305 @@
+"""Async event subsystem: the sequential↔bucketed equivalence wall, the
+deterministic virtual clock, snapshot-ring invariants, bucket mixing, and
+the lazy non-IID partitions.
+
+The bucketed engine (AsyncFLRun) must be a pure execution-layout change:
+for a fixed seed it replays the sequential ``FLRun.run_async`` trajectory
+(same event order, same batches, same snapshots/anchors, same
+staleness-discounted mixing) up to vmapped-reduction float error — with or
+without arrival jitter and dropout, on every engine class.
+"""
+import os
+
+# the multi-device CI job forces a host device count before jax initializes
+if os.environ.get("REPRO_HOST_DEVICES") and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_HOST_DEVICES"])
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CNNS, HeliosConfig, reduced
+from repro.core import aggregation as AG
+from repro.data.federated import (partition_by_topic, partition_by_topic_lazy,
+                                  partition_iid, partition_noniid,
+                                  partition_noniid_lazy)
+from repro.data.synthetic import class_gaussian_images
+from repro.federated import (AsyncFLRun, BatchedFLRun, BernoulliDropout,
+                             FLRun, JitteredArrival, ShardedFLRun, SimClock,
+                             make_fleet, setup_clients)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    HAVE_HYP = True
+except ImportError:                                     # pragma: no cover
+    HAVE_HYP = False
+
+needs_hyp = pytest.mark.skipif(not HAVE_HYP, reason="hypothesis missing")
+
+
+@pytest.fixture(scope="module")
+def setting():
+    cfg = reduced(CNNS["lenet"])
+    imgs, labels = class_gaussian_images(800, cfg.image_size,
+                                         cfg.in_channels, cfg.num_classes,
+                                         seed=0)
+    ti, tl = class_gaussian_images(96, cfg.image_size, cfg.in_channels,
+                                   cfg.num_classes, seed=9)
+    parts = partition_iid(len(labels), 8, seed=0)
+    return cfg, {"images": imgs, "labels": labels}, \
+        {"images": ti, "labels": tl}, parts
+
+
+def _make(setting, cls, scheme, **kw):
+    cfg, train, test, parts = setting
+    hcfg = HeliosConfig()
+    clients = setup_clients(make_fleet(4, 4), parts, hcfg)
+    return cls(cfg, hcfg, scheme, clients, train, test,
+               local_steps=1, batch_size=8, lr=0.1, seed=0, eval_batch=96,
+               **kw)
+
+
+def _max_param_diff(a, b):
+    return max(float(np.max(np.abs(np.asarray(x, np.float32)
+                                   - np.asarray(y, np.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# the equivalence wall: sequential run_async <-> bucketed AsyncFLRun
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", ["asyn", "afo"])
+def test_async_equivalence_wall(setting, scheme):
+    """Fixed seed, >= 64 events: the bucketed engine reproduces the
+    sequential global-param trajectory, processes the identical event set,
+    and compiles exactly one program per bucket-shape signature."""
+    seq = _make(setting, FLRun, scheme)
+    buck = _make(setting, AsyncFLRun, scheme)
+    seq.run_async(52, eval_every=0)
+    buck.run_async(52, eval_every=0)
+    assert seq.events_processed >= 64
+    assert buck.events_processed == seq.events_processed
+    assert buck.agg_counter == seq.agg_counter
+    assert _max_param_diff(seq.global_params, buck.global_params) < 1e-5
+    # ...and each client re-anchored to the same aggregation step
+    for cs, cb in zip(seq.clients, buck.clients):
+        assert cs.staleness_anchor == cb.staleness_anchor
+    # shape-stable compilation: one program per padded bucket size
+    progs = buck.bucket_programs()
+    assert progs and all(v == 1 for v in progs.values()), progs
+    assert max(buck.bucket_sizes) > 1          # ties actually bucketed
+    assert buck.snapshot_anchor_misses == 0
+    assert buck.snapshot_peak <= 64 + len(buck.clients) + 2
+
+
+def test_async_equivalence_with_jitter_and_dropout(setting):
+    """Pluggable arrival/dropout processes draw once per event in pop order
+    on both engines, so a jittered lossy fleet still replays identically."""
+    runs = []
+    for cls in (FLRun, AsyncFLRun):
+        r = _make(setting, cls, "afo",
+                  arrival=JitteredArrival(sigma=0.2),
+                  dropout=BernoulliDropout(p=0.25, penalty=0.5))
+        r.run_async(24, eval_every=0)
+        runs.append(r)
+    seq, buck = runs
+    assert seq.events_processed == buck.events_processed
+    assert seq.events_dropped == buck.events_dropped > 0
+    assert _max_param_diff(seq.global_params, buck.global_params) < 1e-5
+
+
+def test_bucketed_async_on_every_engine(setting):
+    """BatchedFLRun / ShardedFLRun inherit the bucketed async engine (no
+    sequential fallback) and stay on the reference trajectory."""
+    ref = _make(setting, FLRun, "afo")
+    ref.run_async(16, eval_every=0)
+    for cls in (BatchedFLRun, ShardedFLRun):
+        run = _make(setting, cls, "afo")
+        hist = run.run_async(16, eval_every=4)
+        assert run.events_processed == ref.events_processed
+        assert _max_param_diff(ref.global_params, run.global_params) < 1e-5
+        assert hist and all("acc" in h and "bucket" in h for h in hist)
+
+
+def test_soft_scheme_async_delegates_to_sequential(setting):
+    """The bucket program trains full models (the asyn/afo semantics); a
+    soft-training scheme must fall through to the sequential event loop —
+    on every engine class — instead of silently dropping its masks."""
+    # 12 capable completions = 3 virtual ticks: the 2.5x/2.9x stragglers
+    # complete (and soft-train) inside the window
+    ref = _make(setting, FLRun, "helios")
+    ref.run_async(12, eval_every=0)
+    for cls in (AsyncFLRun, BatchedFLRun):
+        run = _make(setting, cls, "helios")
+        run.run_async(12, eval_every=0)
+        assert run.events_processed == ref.events_processed
+        assert _max_param_diff(ref.global_params, run.global_params) < 1e-5
+        # ...and the stragglers' soft-training state actually evolved
+        assert any(int(np.asarray(c.helios_state["cycle"])) > 0
+                   for c in run.clients if c.is_straggler)
+
+
+# ---------------------------------------------------------------------------
+# deterministic virtual clock
+# ---------------------------------------------------------------------------
+
+
+def test_equal_time_events_pop_in_cid_order():
+    """Regression: tie-breaking used to be insertion order (unspecified
+    across engines); the heap is now keyed (time, cid)."""
+    clk = SimClock()
+    for cid in [5, 1, 9, 3, 7]:
+        clk.schedule(2.0, cid)
+    for cid in [4, 0]:
+        clk.schedule(1.0, cid)
+    assert [clk.pop(), clk.pop()] == [0, 4]
+    assert [e.cid for e in clk.pop_bucket()] == [1, 3, 5, 7, 9]
+    assert clk.now == 2.0 and clk.empty()
+
+
+def test_pop_bucket_horizon_and_cap():
+    clk = SimClock()
+    for cid, t in ((0, 1.0), (1, 1.0), (2, 1.4), (3, 2.0)):
+        clk.schedule(t, cid)
+    evs = clk.pop_bucket(horizon=0.5)
+    assert [e.cid for e in evs] == [0, 1, 2]    # 2.0 is past the horizon
+    assert clk.pop_bucket() == [type(evs[0])(2.0, 3)]
+    # max_size caps a tie-group without losing its tail
+    for cid in range(5):
+        clk.schedule(1.0, cid)
+    assert [e.cid for e in clk.pop_bucket(max_size=2)] == [0, 1]
+    assert [e.cid for e in clk.pop_bucket()] == [2, 3, 4]
+
+
+def test_schedule_at_keeps_now_monotone():
+    clk = SimClock()
+    clk.schedule(2.0, 0)
+    clk.pop()
+    clk.schedule_at(1.0, 1)                     # bucket-truncation reinsert
+    assert clk.pop() == 1
+    assert clk.now == 2.0                       # never rewinds
+
+
+# ---------------------------------------------------------------------------
+# snapshot ring buffer + bucket mixing
+# ---------------------------------------------------------------------------
+
+
+def test_ring_alloc_raises_when_all_slots_anchored():
+    alloc = AG.RingAllocator(3)                 # 2 data slots + scratch
+    alloc.seed(0)
+    alloc.retain(0)
+    alloc.alloc(1)
+    alloc.retain(1)
+    with pytest.raises(RuntimeError):
+        alloc.alloc(2)
+
+
+def test_mix_bucket_matches_sequential_mix():
+    key = jax.random.PRNGKey(0)
+    g = {"a": jax.random.normal(key, (3, 4)),
+         "b": jax.random.normal(jax.random.fold_in(key, 1), (5,))}
+    stacked = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.fold_in(key, 2),
+                                    (3,) + x.shape), g)
+    ws = [0.5, 0.25, 0.0]
+    ref = g
+    for i, w in enumerate(ws):
+        ref = AG.mix(ref, jax.tree.map(lambda x: x[i], stacked), w)
+    out = AG.mix_bucket(g, stacked, jnp.asarray(ws, jnp.float32))
+    assert _max_param_diff(ref, out) < 1e-6
+
+
+def test_mix_bucket_ring_snapshots_every_intermediate():
+    key = jax.random.PRNGKey(7)
+    g = {"w": jax.random.normal(key, (4,))}
+    stacked = {"w": jax.random.normal(jax.random.fold_in(key, 1), (2, 4))}
+    ring = {"w": jnp.zeros((4, 4)).at[0].set(g["w"])}
+    ws = jnp.asarray([0.5, 0.25], jnp.float32)
+    out_g, out_ring = AG.mix_bucket_ring(g, ring, jnp.asarray([1, 2]),
+                                         stacked, ws)
+    ref = g
+    for i in range(2):
+        ref = AG.mix(ref, {"w": stacked["w"][i]}, float(ws[i]))
+        np.testing.assert_allclose(out_ring["w"][i + 1], ref["w"],
+                                   atol=1e-6)
+    np.testing.assert_allclose(out_g["w"], ref["w"], atol=1e-6)
+    np.testing.assert_allclose(out_ring["w"][0], g["w"])   # untouched row
+
+
+if HAVE_HYP:
+
+    @needs_hyp
+    @settings(deadline=None, max_examples=40)
+    @given(hst.integers(0, 10 ** 6), hst.floats(0.01, 4.0))
+    def test_staleness_weight_properties(s, a):
+        """(0, 1], monotone non-increasing in staleness, and the traced
+        vector form agrees with the scalar reference."""
+        w = AG.staleness_weight(s, a)
+        assert 0.0 < w <= 1.0
+        assert AG.staleness_weight(s + 1, a) <= w
+        vec = AG.staleness_weights(jnp.asarray([s, s + 1], jnp.float32), a)
+        np.testing.assert_allclose(np.asarray(vec),
+                                   [AG.staleness_weight(s, a),
+                                    AG.staleness_weight(s + 1, a)],
+                                   rtol=2e-5)
+
+    @needs_hyp
+    @settings(deadline=None, max_examples=60)
+    @given(hst.data())
+    def test_ring_allocator_never_evicts_live_anchor(data):
+        """Random completion-event sequences: a slot some client still
+        reads through is never reallocated, every live anchor stays
+        resolvable, and the ring stays bounded by cap + clients."""
+        n_clients = data.draw(hst.integers(1, 6), label="clients")
+        cap = data.draw(hst.integers(1, 4), label="cap")
+        alloc = AG.RingAllocator(max(cap, n_clients + 1) + 1)
+        alloc.seed(0)
+        anchor = {cid: 0 for cid in range(n_clients)}
+        for _ in range(n_clients):
+            alloc.retain(0)
+        agg = 0
+        for _ in range(data.draw(hst.integers(1, 48), label="events")):
+            cid = data.draw(hst.integers(0, n_clients - 1), label="cid")
+            live_others = {a for c2, a in anchor.items() if c2 != cid}
+            alloc.slot_of(anchor[cid])          # must never KeyError
+            agg += 1
+            alloc.release(anchor[cid])
+            s_new = alloc.alloc(agg)
+            assert s_new != alloc.scratch
+            assert all(alloc.slot_of(a) != s_new for a in live_others)
+            alloc.retain(agg)
+            anchor[cid] = agg
+        assert alloc.anchor_misses == 0
+        assert alloc.slots <= cap + n_clients + 2
+        assert alloc.live_slots() <= n_clients
+
+
+# ---------------------------------------------------------------------------
+# lazy non-IID partitions
+# ---------------------------------------------------------------------------
+
+
+def test_lazy_noniid_index_equal():
+    rng = np.random.default_rng(3)
+    labels = rng.integers(0, 10, size=503)
+    eager = partition_noniid(labels, 7, shards_per_client=3, seed=5)
+    lazy = partition_noniid_lazy(labels, 7, shards_per_client=3, seed=5)
+    assert len(lazy) == len(eager) == 7
+    for a, b in zip(eager, (lazy[i] for i in range(7))):
+        assert len(b) == len(a)
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_lazy_by_topic_index_equal():
+    rng = np.random.default_rng(4)
+    topics = rng.integers(0, 8, size=257)
+    eager = partition_by_topic(topics, 5, topics_per_client=2, seed=1)
+    lazy = partition_by_topic_lazy(topics, 5, topics_per_client=2, seed=1)
+    for a, b in zip(eager, (lazy[i] for i in range(5))):
+        np.testing.assert_array_equal(a, np.asarray(b))
