@@ -212,6 +212,13 @@ class HeliosConfig:
     # rotation regulation (Section VI.A): threshold = 1 + m / sum(p_i n_i)
     rotation_threshold_auto: bool = True
     rotation_threshold: int = 4
+    # block-aligned selection (beyond-paper, DESIGN.md §2): run Eq. 2 at
+    # this unit-block granularity (block-pooled scores -> block-constant
+    # masks keeping ~P·n units) so the Pallas masked-matmul kernels SKIP
+    # dead blocks structurally without inflating the compressed volume
+    # (match the kernel block_n, 128 on TPU).  0 = unit-granular (paper-
+    # exact).
+    mask_block: int = 0
     # aggregation (Section VI.B)
     aggregation: str = "alpha_weighted"   # alpha_weighted (Eq.10) | masked_mean | uniform
     # identification (Section IV.B)

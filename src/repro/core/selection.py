@@ -42,18 +42,82 @@ def _row_select(u: jax.Array, forced: jax.Array, k_total: jax.Array,
     return mask
 
 
+def _pool_blocks(u: jax.Array, block: int, reduce: str) -> jax.Array:
+    """(L, n) unit values -> (L, ceil(n/block)) per-block values.
+
+    ``mean`` averages over the REAL entries of the ragged tail block (the
+    zero padding never dilutes a block's score); ``max`` is any-of.
+    """
+    L, n = u.shape
+    nb = -(-n // block)
+    up = jnp.pad(u, ((0, 0), (0, nb * block - n)))
+    grouped = up.reshape(L, nb, block)
+    if reduce == "mean":
+        cnt = jnp.minimum(block, n - jnp.arange(nb) * block)
+        return grouped.sum(-1) / cnt[None, :]
+    return grouped.max(-1)
+
+
+def _expand_blocks(bm: jax.Array, block: int, n: int) -> jax.Array:
+    """Inverse of :func:`_pool_blocks` for 0/1 masks: block-constant (L, n)."""
+    return jnp.repeat(bm, block, axis=-1)[..., :n]
+
+
 def select_masks(scores: Dict[str, jax.Array],
                  forced: Dict[str, jax.Array],
                  volume: jax.Array,
                  p_s: float,
-                 key: jax.Array) -> Dict[str, jax.Array]:
+                 key: jax.Array,
+                 block: int = 0) -> Dict[str, jax.Array]:
     """Eq. 2 across all unit types.  scores/forced: {key: (L, n)}.
 
     ``volume`` is the client's P (scalar in (0, 1], traced).  Returns masks
     {key: (L, n) float 0/1} with ~P*n ones per row.  Traced counts plus the
     explicit key argument make this directly vmap-able over a stacked client
     cohort (federated.runtime.BatchedFLRun vmaps the whole cycle).
+
+    ``block`` > 0 runs Eq. 2 at BLOCK granularity (beyond-paper, for the
+    Pallas kernels): unit scores are mean-pooled per block, forced flags
+    any-pooled, the top-k/random/forced draw picks ~P·(n/block) blocks, and
+    the mask expands block-constant.  Rounding a unit-scattered selection
+    UP instead (block_align_mask) degenerates to the full model — a block
+    survives only with probability (1-P)^block — so selecting blocks is the
+    version that keeps the compressed volume at P while staying
+    structurally skippable.
+
+    Pooling applies ONLY to unit types with n >= 4·block.  Block selection
+    quantizes a layer's volume to the 1/nb grid with a floor of one block,
+    so few-block layers would silently train far above P (one-of-two
+    blocks = 50% minimum); requiring nb >= 4 bounds the grid at 1/4 —
+    conv channels, attention heads, and tiny fc layers keep unit-granular
+    Eq. 2 and their exact share of P, at the cost of no structural skip
+    there (on TPU the layers that matter are 16+ blocks wide and their
+    grid is fine).
     """
+    if block:
+        pooled = {k for k, u in scores.items()
+                  if u.shape[-1] >= 4 * block}
+        if not pooled:
+            # nothing qualifies for pooling: fall straight through to the
+            # unit-granular path on the ORIGINAL key, so mask_block > 0 on
+            # a small model stays seed-compatible with mask_block = 0
+            return select_masks(scores, forced, volume, p_s, key)
+        bscores = {k: _pool_blocks(scores[k], block, "mean")
+                   for k in pooled}
+        bforced = {k: _pool_blocks(forced[k].astype(jnp.float32), block,
+                                   "max").astype(bool)
+                   for k in pooled if k in forced}
+        # distinct subkeys per group: two unit types of equal size in
+        # different groups must not share a selection stream
+        bmasks = select_masks(bscores, bforced, volume, p_s,
+                              jax.random.fold_in(key, 0xB10C))
+        unit = select_masks({k: u for k, u in scores.items()
+                             if k not in pooled},
+                            {k: f for k, f in forced.items()
+                             if k not in pooled}, volume, p_s,
+                            jax.random.fold_in(key, 0x0A11))
+        return {k: _expand_blocks(bmasks[k], block, scores[k].shape[-1])
+                if k in pooled else unit[k] for k in scores}
     out = {}
     for i, (k, u) in enumerate(sorted(scores.items())):
         L, n = u.shape

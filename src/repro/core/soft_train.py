@@ -48,7 +48,14 @@ def init_state(schema: Dict[str, tuple], volume: float = 1.0,
 
 
 def begin_cycle(state: dict, hcfg: HeliosConfig) -> dict:
-    """Select this cycle's masks from scores + rotation state."""
+    """Select this cycle's masks from scores + rotation state.
+
+    With ``hcfg.mask_block`` set, Eq. 2 selection runs at BLOCK granularity
+    (block-pooled scores, block-constant masks, ~P·n units kept) — the
+    single seam all engines share, so seq/batched/sharded/async cohorts
+    stay mask-identical and the Pallas kernels skip dead blocks
+    structurally without losing the compressed volume.
+    """
     if not hcfg.enabled:
         return state
     rng, sub = jax.random.split(state["rng"])
@@ -57,7 +64,7 @@ def begin_cycle(state: dict, hcfg: HeliosConfig) -> dict:
                                   hcfg.rotation_threshold)
     forced = S.forced_units(state["skip_counts"], thresh)
     masks = S.select_masks(state["scores"], forced, state["volume"],
-                           hcfg.p_s, sub)
+                           hcfg.p_s, sub, block=hcfg.mask_block)
     return {**state, "masks": masks, "rng": rng}
 
 

@@ -51,11 +51,18 @@ class FamilyAdapter:
     #: True when larger metric values are better (accuracy-style)
     higher_is_better: bool = True
 
-    def __init__(self, cfg: ModelConfig):
+    def __init__(self, cfg: ModelConfig, kernels: str = "reference",
+                 mask_block: int = 128):
         self.cfg = cfg
         self.api = build(cfg)
         self.axes = logical_axes(cfg)
         self.schema = self.api.mask_schema
+        #: execution substrate for the soft-training loss: "reference"
+        #: (plain jnp) or "pallas" (block-sparse masked matmuls + flash
+        #: attention, kernels/ops.py); ``mask_block`` is the skip
+        #: granularity the kernels use (match HeliosConfig.mask_block)
+        self.kernels = kernels
+        self.mask_block = mask_block
 
     # -- data ----------------------------------------------------------
     def num_examples(self, data: Dict[str, np.ndarray]) -> int:
@@ -135,7 +142,8 @@ class CNNAdapter(FamilyAdapter):
     higher_is_better = True
 
     def loss_fn(self, params, batch, masks):
-        return self.api.loss_fn(params, batch, self.cfg, None, masks)
+        rt = {"kernels": self.kernels, "mask_block": self.mask_block}
+        return self.api.loss_fn(params, batch, self.cfg, rt, masks)
 
     def eval_chunk(self, params, batch):
         logits = cnn_logits(params, batch["images"], self.cfg)
@@ -157,15 +165,23 @@ class TokenLMAdapter(FamilyAdapter):
     metric_name = "ce"
     higher_is_better = False
 
-    def __init__(self, cfg: ModelConfig):
-        super().__init__(cfg)
+    def __init__(self, cfg: ModelConfig, kernels: str = "reference",
+                 mask_block: int = 128):
+        super().__init__(cfg, kernels, mask_block)
         self.rt = default_runtime(cfg)
+        self.rt["kernels"] = kernels
+        self.rt["mask_block"] = mask_block
+        # eval always runs the reference substrate (matching CNNAdapter):
+        # there are no masks to skip, so the kernels buy nothing — and on
+        # CPU the interpret-mode flash kernel would slow every full-test-set
+        # pass for free
+        self.eval_rt = default_runtime(cfg)
 
     def loss_fn(self, params, batch, masks):
         return self.api.loss_fn(params, batch, self.cfg, self.rt, masks)
 
     def eval_chunk(self, params, batch):
-        ce = self.api.loss_fn(params, batch, self.cfg, self.rt, None)
+        ce = self.api.loss_fn(params, batch, self.cfg, self.eval_rt, None)
         n = batch["tokens"].shape[0]
         return ce * n, jnp.asarray(n, jnp.float32)
 
@@ -177,12 +193,18 @@ class TokenLMAdapter(FamilyAdapter):
         return MK.expand_masks(self.axes, unit_masks, params_tree)
 
 
-def make_adapter(cfg: ModelConfig) -> FamilyAdapter:
-    """Family dispatch for the FL engines."""
+def make_adapter(cfg: ModelConfig, kernels: str = "reference",
+                 mask_block: int = 128) -> FamilyAdapter:
+    """Family dispatch for the FL engines.
+
+    ``kernels="pallas"`` makes the adapter's loss run on the Pallas
+    soft-training kernels (kernels/ops.py) — same trajectories as
+    ``"reference"`` at atol 1e-5 (tests/test_kernel_softtrain.py).
+    """
     if cfg.family == "cnn":
-        return CNNAdapter(cfg)
+        return CNNAdapter(cfg, kernels, mask_block)
     if cfg.family in TOKEN_FAMILIES:
-        return TokenLMAdapter(cfg)
+        return TokenLMAdapter(cfg, kernels, mask_block)
     raise NotImplementedError(
         f"no FamilyAdapter for family {cfg.family!r}: encdec/vlm need extra "
         "input streams (enc_embeds / image_embeds) — subclass FamilyAdapter "

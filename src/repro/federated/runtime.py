@@ -161,9 +161,21 @@ class FLRun:
     #: max distinct compiled programs kept per engine (round shapes, bucket
     #: shapes); least-recently-used programs are evicted beyond this
     round_cache_cap: int = 8
+    #: soft-training execution substrate: "reference" (plain jnp masked ops)
+    #: or "pallas" (block-sparse masked-matmul + flash-attention kernels,
+    #: kernels/ops.py — interpret mode on CPU, native on TPU).  Every engine
+    #: (seq/batched/sharded/async) accepts both and produces the same
+    #: trajectory at atol 1e-5 (tests/test_kernel_softtrain.py).
+    kernels: str = "reference"
+    #: kernel skip granularity.  0 (default) = follow HeliosConfig.
+    #: mask_block (falling back to 128 when that is 0 too), so block-
+    #: granular Eq. 2 selection and the kernels' skip blocks stay in sync
+    #: from the ONE knob; set explicitly only to decouple them.
+    mask_block: int = 0
 
     def __post_init__(self):
-        self.adapter = make_adapter(self.cfg)
+        self.mask_block = self.mask_block or self.hcfg.mask_block or 128
+        self.adapter = make_adapter(self.cfg, self.kernels, self.mask_block)
         self.api = self.adapter.api
         self.axes = self.adapter.axes
         self.global_params = init_params(jax.random.PRNGKey(self.seed),

@@ -11,7 +11,19 @@ the volume fraction P, which is exactly the paper's edge-device speedup
 mechanism re-expressed for the MXU.
 
 Grid: (M/bm, N/bn, K/bk), K innermost for accumulation.  ``block_alive`` is
-a precomputed (N/bn,) flag vector (mask.reshape(-1, bn).any(1)).
+a precomputed flag vector (mask.reshape(-1, bn).any(1)).
+
+One kernel body serves both directions of the soft-training VJP — only the
+grid axis the alive flag indexes differs:
+
+* ``masked_matmul`` — flags index the OUTPUT-COLUMN (N) blocks: dead
+  columns of y are written as zeros (the forward pass, and dw in the
+  backward).
+* ``masked_matmul_dk`` — flags index the CONTRACTION (K) blocks: dx =
+  dy @ Wᵀ skipping K-blocks whose columns were masked out of the forward —
+  exact whenever the skipped operand rows are zero, which the masked
+  forward guarantees (dead columns of y, hence of dy·mask, are zero).
+  Together the two make fwd AND bwd scale with the volume fraction P.
 """
 from __future__ import annotations
 
@@ -24,7 +36,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(alive_ref, x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
-    """One (bm, bn) output tile; K-blocks arrive sequentially (innermost)."""
+    """One (bm, bn) output tile; K-blocks arrive sequentially (innermost).
+    ``alive_ref`` holds this grid point's flag — which axis it came from is
+    decided by the BlockSpec index_map below."""
     k_idx = pl.program_id(2)
     alive = alive_ref[0] != 0
 
@@ -42,6 +56,31 @@ def _kernel(alive_ref, x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _call(x, w, block_alive, alive_axis, block_m, block_n, block_k,
+          interpret):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, \
+        (x.shape, w.shape, block_m, block_n, block_k)
+    n_k = k // block_k
+    alive_spec = pl.BlockSpec((1,), (lambda i, j, kk: (j,)) if
+                              alive_axis == "n" else (lambda i, j, kk: (kk,)))
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(m // block_m, n // block_n, n_k),
+        in_specs=[
+            alive_spec,
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(block_alive.astype(jnp.int32), x, w)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("block_m", "block_n", "block_k",
                                     "interpret"))
@@ -54,24 +93,22 @@ def masked_matmul(x: jax.Array, w: jax.Array, block_alive: jax.Array,
     Masked-out columns of the result are ZERO (matching W*mask semantics
     when the mask is block-aligned).
     """
-    m, k = x.shape
-    k2, n = w.shape
-    assert k == k2, (x.shape, w.shape)
-    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, \
-        (x.shape, w.shape, block_m, block_n, block_k)
-    n_k = k // block_k
+    return _call(x, w, block_alive, "n", block_m, block_n, block_k,
+                 interpret)
 
-    grid = (m // block_m, n // block_n, n_k)
-    return pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1,), lambda i, j, kk: (j,)),            # alive flag
-            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        interpret=interpret,
-    )(block_alive.astype(jnp.int32), x, w)
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_n", "block_k",
+                                    "interpret"))
+def masked_matmul_dk(x: jax.Array, w: jax.Array, block_alive: jax.Array,
+                     *, block_m: int = 128, block_n: int = 128,
+                     block_k: int = 128, interpret: bool = False) -> jax.Array:
+    """y = x @ w with dead CONTRACTION (K) blocks skipped.
+
+    x: (M, K); w: (K, N); block_alive: (K // block_k,) int32/bool.  Exact
+    equality with the dense product requires the skipped blocks' operand
+    entries to be zero (true for masked-gradient cotangents dy·mask and for
+    masked hidden activations h·mask).
+    """
+    return _call(x, w, block_alive, "k", block_m, block_n, block_k,
+                 interpret)

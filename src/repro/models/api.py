@@ -72,6 +72,13 @@ def default_runtime(cfg: ModelConfig, shape: Optional[ShapeConfig] = None,
         "attn_impl": "chunked" if long_seq else "auto",
         "moe_impl": "grouped",
         "moe_groups": moe_groups,
+        # kernel-backed soft-training: "pallas" routes masked dense layers
+        # and causal self-attention through the Pallas kernels (interpret
+        # mode on CPU, native on TPU); "reference" is the plain-jnp path.
+        # mask_block is the block-sparse skip granularity — match
+        # HeliosConfig.mask_block so selection is structurally skippable.
+        "kernels": "reference",
+        "mask_block": 128,
         "remat": True,
         "rope": True,
         # activation sharding constraints (PartitionSpec), set by the launch

@@ -66,6 +66,24 @@ def _apply(x, mask):
     return x if mask is None else x * mask
 
 
+def _fc(params, x, name, masks, kernels, mask_block, act=jnp.tanh):
+    """One maskable dense layer: act(x @ W + b) · mask.
+
+    With ``kernels="pallas"`` the matmul runs on the block-sparse Pallas
+    kernel — x @ (W·mask) with dead column blocks skipped in forward and
+    backward; the output-channel mask still multiplies the activation, so
+    the numerics match the reference path exactly (masked units are zero
+    either way, and their W/b gradients are exactly zero in both)."""
+    m = _m(masks, name)
+    w, b = params[f"{name}_w"], params[f"{name}_b"]
+    if kernels == "pallas" and m is not None:
+        from repro.kernels import ops
+        z = ops.masked_dense(x, w, m, impl="pallas", block_n=mask_block)
+    else:
+        z = x @ w
+    return _apply(act(z + b), m)
+
+
 # ---------------------------------------------------------------------------
 # LeNet-5
 # ---------------------------------------------------------------------------
@@ -86,7 +104,7 @@ def lenet_mask_schema(cfg: ModelConfig) -> Dict[str, tuple]:
     return {"conv0": (1, c1), "conv1": (1, c2), "fc0": (1, 120), "fc1": (1, 84)}
 
 
-def lenet_fwd(params, x, cfg, masks=None):
+def lenet_fwd(params, x, cfg, masks=None, kernels=None, mask_block=128):
     x = jnp.tanh(conv2d(x, params["conv0_w"], params["conv0_b"]))
     x = _apply(x, _m(masks, "conv0"))
     x = avg_pool(x)
@@ -94,8 +112,8 @@ def lenet_fwd(params, x, cfg, masks=None):
     x = _apply(x, _m(masks, "conv1"))
     x = avg_pool(x)
     x = x.reshape(x.shape[0], -1)
-    x = _apply(jnp.tanh(x @ params["fc0_w"] + params["fc0_b"]), _m(masks, "fc0"))
-    x = _apply(jnp.tanh(x @ params["fc1_w"] + params["fc1_b"]), _m(masks, "fc1"))
+    x = _fc(params, x, "fc0", masks, kernels, mask_block)
+    x = _fc(params, x, "fc1", masks, kernels, mask_block)
     return x @ params["head_w"] + params["head_b"]
 
 
@@ -124,7 +142,7 @@ def alexnet_mask_schema(cfg: ModelConfig) -> Dict[str, tuple]:
     return out
 
 
-def alexnet_fwd(params, x, cfg, masks=None):
+def alexnet_fwd(params, x, cfg, masks=None, kernels=None, mask_block=128):
     cs = cfg.cnn_channels
     pool_after = {0, 1, len(cs) - 1}
     for i in range(len(cs)):
@@ -133,8 +151,8 @@ def alexnet_fwd(params, x, cfg, masks=None):
         if i in pool_after:
             x = max_pool(x)
     x = x.reshape(x.shape[0], -1)
-    x = _apply(jax.nn.relu(x @ params["fc0_w"] + params["fc0_b"]), _m(masks, "fc0"))
-    x = _apply(jax.nn.relu(x @ params["fc1_w"] + params["fc1_b"]), _m(masks, "fc1"))
+    x = _fc(params, x, "fc0", masks, kernels, mask_block, act=jax.nn.relu)
+    x = _fc(params, x, "fc1", masks, kernels, mask_block, act=jax.nn.relu)
     return x @ params["head_w"] + params["head_b"]
 
 
@@ -166,7 +184,9 @@ def resnet18_mask_schema(cfg: ModelConfig) -> Dict[str, tuple]:
     return out
 
 
-def resnet18_fwd(params, x, cfg, masks=None):
+def resnet18_fwd(params, x, cfg, masks=None, kernels=None, mask_block=128):
+    # maskable units are conv filters only — the Pallas dense kernels have
+    # no call site here; ``kernels`` is accepted for dispatch uniformity
     ws = cfg.cnn_channels
     x = jax.nn.relu(group_norm(conv2d(x, params["stem_w"], params["stem_b"])))
     cin = ws[0]
@@ -208,12 +228,15 @@ def cnn_mask_schema(cfg):
     return _SCHEMAS[cfg.name](cfg)
 
 
-def cnn_logits(params, images, cfg, masks=None):
-    return _FWDS[cfg.name](params, images, cfg, masks)
+def cnn_logits(params, images, cfg, masks=None, kernels=None, mask_block=128):
+    return _FWDS[cfg.name](params, images, cfg, masks, kernels, mask_block)
 
 
 def cnn_loss(params, batch, cfg, rt=None, masks=None, active_mlp_idx=None):
-    logits = cnn_logits(params, batch["images"], cfg, masks)
+    rt = rt or {}
+    logits = cnn_logits(params, batch["images"], cfg, masks,
+                        kernels=rt.get("kernels"),
+                        mask_block=rt.get("mask_block", 128))
     labels = batch["labels"]
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]

@@ -204,7 +204,28 @@ def _chunked_attention(q, k, v, *, causal: bool, q_chunk: int,
 
 def attend(q, k, v, *, causal: bool, impl: str = "auto",
            kv_len_mask: Optional[jax.Array] = None, q_offset=0):
-    """Dispatch: dense for short, chunked for long sequences."""
+    """Dispatch: dense for short, chunked for long sequences, and
+    ``impl="pallas"`` for the kernel-backed training path (Pallas flash
+    attention with a recompute VJP).  The kernel handles the full-sequence
+    causal self-attention case; anything else (decode with a valid-key
+    mask, non-zero query offsets, cross-length) falls back to "auto"."""
+    if impl == "pallas":
+        # long sequences keep the chunked lowering even under kernels=
+        # "pallas": the flash kernel's recompute VJP materializes O(S²)
+        # scores in the backward, which is what chunked exists to avoid
+        # (same 4096 threshold as the "auto" resolution below)
+        if causal and kv_len_mask is None and q.shape[1] == k.shape[1] \
+                and q.shape[1] < 4096 \
+                and isinstance(q_offset, int) and q_offset == 0:
+            from repro.kernels import ops
+            groups = q.shape[2] // k.shape[2]
+            kf = _repeat_kv(k, groups)
+            vf = _repeat_kv(v, groups)
+            out = ops.flash_attention(q.transpose(0, 2, 1, 3),
+                                      kf.transpose(0, 2, 1, 3),
+                                      vf.transpose(0, 2, 1, 3), causal=True)
+            return out.transpose(0, 2, 1, 3)
+        impl = "auto"
     if impl == "auto":
         impl = "chunked" if (q.shape[1] >= 4096 and q.shape[1] == k.shape[1]
                              and kv_len_mask is None) else "dense"
@@ -290,12 +311,17 @@ def mlp_spec(d: int, ff: int, activation: str = "silu"):
 
 def mlp_fwd(params, x, activation: str = "silu",
             unit_mask: Optional[jax.Array] = None,
-            active_idx: Optional[jax.Array] = None):
+            active_idx: Optional[jax.Array] = None,
+            kernels: Optional[str] = None, mask_block: int = 128):
     """Gated MLP.
 
     Helios hooks:
       * ``unit_mask`` (masked mode): float 0/1 over d_ff — paper-faithful
-        semantics, no FLOP savings on dense hardware.
+        semantics; with ``kernels="pallas"`` the masked matmuls run on the
+        block-sparse Pallas pair (dead column blocks skipped in forward AND
+        backward, masked-unit grads exactly zero) so the volume fraction P
+        becomes real compute savings.  ``mask_block`` is the skip
+        granularity (match HeliosConfig.mask_block for structural skipping).
       * ``active_idx`` (compact mode): int32 (k,) of active hidden units —
         weights are GATHERED to (d, k) so the compiled matmuls shrink by
         k/d_ff.  TPU-native soft-training (DESIGN.md §2).
@@ -307,6 +333,18 @@ def mlp_fwd(params, x, activation: str = "silu",
         wo = jnp.take(wo, active_idx, axis=0)
         if wg is not None:
             wg = jnp.take(wg, active_idx, axis=1)
+    if kernels == "pallas" and unit_mask is not None and active_idx is None:
+        from repro.kernels import ops
+        hi = ops.masked_dense(x, wi, unit_mask, impl="pallas",
+                              block_n=mask_block)
+        if activation == "silu":
+            hg = ops.masked_dense(x, wg, unit_mask, impl="pallas",
+                                  block_n=mask_block)
+            h = jax.nn.silu(hg) * hi
+        else:
+            h = jax.nn.gelu(hi)
+        return ops.masked_contract(h, wo, unit_mask, impl="pallas",
+                                   block_n=mask_block)
     h = x @ wi
     if activation == "silu":
         h = jax.nn.silu(x @ wg) * h

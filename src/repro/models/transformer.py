@@ -117,13 +117,25 @@ def _mask_slice(masks, key, i):
 
 def _block_fwd(p, x, positions, cfg, rt, *, kind: str, head_mask=None,
                mlp_mask=None, expert_mask=None, active_mlp_idx=None):
+    # kernel-backed soft-training: rt["kernels"]="pallas" routes the causal
+    # self-attention through the Pallas flash kernel and the masked MLP
+    # through the block-sparse masked-matmul pair (MLA / MoE paths keep
+    # their own lowerings — the dispatch is per call site).  The long-seq
+    # "chunked" lowering is NOT overridden: the flash kernel's recompute
+    # VJP materializes O(S²) scores in the backward, which is exactly what
+    # chunked attention exists to avoid (native flash bwd kernel = the
+    # remaining TPU work, see ROADMAP).
+    kern = rt.get("kernels")
+    attn_impl = "pallas" if (kern == "pallas"
+                             and rt["attn_impl"] != "chunked") \
+        else rt["attn_impl"]
     h = L.apply_norm(p["attn_norm"], x, cfg.norm)
     if cfg.use_mla:
         attn_out = mla.mla_fwd(p["attn"], h, positions, cfg,
                                impl=rt["attn_impl"], head_mask=head_mask)
     else:
         attn_out = L.attention_fwd(p["attn"], h, positions, theta=cfg.rope_theta,
-                                   impl=rt["attn_impl"], head_mask=head_mask,
+                                   impl=attn_impl, head_mask=head_mask,
                                    rope=rt.get("rope", True),
                                    kv_spec=rt.get("kv_spec"))
     # named for the remat policy: saving attention outputs avoids
@@ -136,7 +148,8 @@ def _block_fwd(p, x, positions, cfg, rt, *, kind: str, head_mask=None,
                         impl=rt["moe_impl"], moe_groups=rt["moe_groups"])
     else:
         y = L.mlp_fwd(p["mlp"], h, cfg.activation, unit_mask=mlp_mask,
-                      active_idx=active_mlp_idx)
+                      active_idx=active_mlp_idx, kernels=kern,
+                      mask_block=rt.get("mask_block", 128))
     return x + y
 
 
