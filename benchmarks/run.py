@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import contracts as CT
 from repro.configs import CNNS, HeliosConfig, reduced
 from repro.data.federated import (partition_iid, partition_noniid,
                                   partition_noniid_lazy)
@@ -243,7 +244,8 @@ def table_batched_rounds(model="lenet", counts=(16, 64, 256), rounds=3,
         **run_kw)
     with open(out_path, "w") as f:
         json.dump({"model": model, "rounds": rounds, "scheme": "helios",
-                   **run_kw, "results": results}, f, indent=2)
+                   **run_kw, "results": results,
+                   "contract_counters": dict(CT.counters)}, f, indent=2)
     print(f"wrote {out_path}")
 
 
@@ -463,7 +465,75 @@ def table_async_events(model="lenet", counts=(64, 256, 1024),
     with open(out_path, "w") as f:
         json.dump({"model": model, "scheme": "afo",
                    "partition": "noniid_lazy", **run_kw,
-                   "results": results}, f, indent=2)
+                   "results": results,
+                   "contract_counters": dict(CT.counters)}, f, indent=2)
+    print(f"wrote {out_path}")
+
+
+# ---------------------------------------------------------------------------
+# runtime contracts: guard overhead, off vs on
+# ---------------------------------------------------------------------------
+
+
+def table_contracts_overhead(model="lenet", n_clients=8, rounds=6,
+                             out_path="BENCH_contracts.json"):
+    """repro.analysis.contracts cost on the batched engine, off vs on.
+
+    Same seed/fleet/trajectory both ways; ``off`` is the default CI/bench
+    mode and must be genuinely free — no guard installed, every counter
+    still zero after the run (asserted and recorded).  ``on`` pays the
+    transfer-guard sections plus the per-run finite/mask/compile checks;
+    the JSON records the counter census so regressions in check volume
+    are visible, not just wall time.
+    """
+    import json
+
+    cfg = reduced(CNNS[model])
+    noise = _NOISE.get(model, 4.0)
+    imgs, labels = class_gaussian_images(
+        1024, cfg.image_size, cfg.in_channels, cfg.num_classes, seed=0,
+        noise=noise)
+    ti, tl = class_gaussian_images(
+        128, cfg.image_size, cfg.in_channels, cfg.num_classes, seed=99,
+        noise=noise)
+    parts = partition_iid(len(labels), n_clients, seed=0)
+    run_kw = dict(local_steps=1, batch_size=16, lr=0.05, seed=0)
+    results = {}
+    for mode in ("off", "on"):
+        CT.reset_counters()
+        clients = setup_clients(make_fleet(n_clients - n_clients // 2,
+                                           n_clients // 2), parts,
+                                HeliosConfig())
+        run = BatchedFLRun(cfg, HeliosConfig(), "helios", clients,
+                           {"images": imgs, "labels": labels},
+                           {"images": ti, "labels": tl}, **run_kw)
+        with CT.override(mode == "on"):
+            run.run_sync(1, eval_every=0)                 # compile warmup
+            jax.block_until_ready(run.global_params)
+            t0 = time.perf_counter()
+            run.run_sync(rounds, eval_every=0)
+            jax.block_until_ready(run.global_params)
+            dt = time.perf_counter() - t0
+        results[mode] = {"sec_per_round": dt / rounds,
+                         "rounds_per_sec": rounds / dt,
+                         "counters": dict(CT.counters)}
+    off, on = results["off"], results["on"]
+    assert all(v == 0 for v in off["counters"].values()), off["counters"]
+    overhead = on["sec_per_round"] / off["sec_per_round"] - 1.0
+    emit(f"contracts/{model}/{n_clients}clients/off",
+         off["sec_per_round"] * 1e6,
+         f"rounds_per_sec={off['rounds_per_sec']:.3f}")
+    emit(f"contracts/{model}/{n_clients}clients/on",
+         on["sec_per_round"] * 1e6,
+         f"rounds_per_sec={on['rounds_per_sec']:.3f};"
+         f"overhead={overhead * 100:+.1f}%;"
+         f"checks={sum(on['counters'].values())}")
+    with open(out_path, "w") as f:
+        json.dump({"model": model, "clients": n_clients, "rounds": rounds,
+                   "scheme": "helios", **{k: v for k, v in run_kw.items()
+                                          if k != "seed"},
+                   "results": results, "overhead_frac": overhead}, f,
+                  indent=2)
     print(f"wrote {out_path}")
 
 
@@ -660,6 +730,7 @@ TABLES = {
     "federated_lm": table_federated_lm,
     "sharded_population": table_sharded_population,
     "async_events": table_async_events,
+    "contracts": table_contracts_overhead,
     "kernel_softtrain": table_kernel_softtrain,
     "kernels": bench_kernels,
     "softtrain": bench_softtrain_flops,
@@ -688,6 +759,8 @@ def main() -> None:
             fn(devices=(1, 16), populations=(256,), rounds=4)
         elif args.quick and name == "async_events":
             fn(counts=(64,), capable_per_client=0.5)
+        elif args.quick and name == "contracts":
+            fn(n_clients=4, rounds=3)
         elif args.quick and name == "kernel_softtrain":
             fn(fracs=(0.25, 1.0), steps=2)
         else:

@@ -6,7 +6,6 @@ a leaving device just drops out of the next aggregation.
 
   PYTHONPATH=src python examples/elastic_scaling.py
 """
-import numpy as np
 
 from repro.configs import CNNS, HeliosConfig, reduced
 from repro.data.federated import partition_noniid

@@ -15,7 +15,7 @@ from repro.core.volume import volume_from_profile
 from repro.data.synthetic import class_gaussian_images
 from repro.federated.adapter import make_adapter
 from repro.federated.heterogeneity import CAPABLE, TABLE_I, cycle_time
-from repro.models import build, init_params, make_full_masks
+from repro.models import build, init_params
 from repro.optim import apply_updates, make_optimizer
 
 # 1. a model (the paper's LeNet testbed, reduced for CPU) + its FL adapter

@@ -1,0 +1,25 @@
+"""repro.analysis — JAX-hazard linter + runtime contract guards.
+
+Layer 1 (static): an AST linter with Helios-specific rules —
+
+  R1  Python branching on traced values inside jitted functions
+  R2  jax.random key reuse / missing split along a dataflow path
+  R3  host-sync hazards (float/.item()/np.asarray) inside hot loops
+  R4  retrace hazards (per-call jit, jit-in-loop, unhashable statics)
+  R5  donated-buffer use-after-donate
+  R6  dead code (unused imports, orphan modules)
+
+CLI: ``python -m repro.analysis lint|report <paths>``; suppress a finding
+with ``# repro: noqa[Rn]`` on its line.
+
+Layer 2 (runtime): :mod:`repro.analysis.contracts` — transfer guards,
+checkify NaN tripwires, compile-count budgets, and domain invariants at
+the engine seams, all gated by ``REPRO_CONTRACTS`` (off by default).
+"""
+from repro.analysis import contracts
+from repro.analysis.lint import (lint_paths, make_report, unsuppressed,
+                                 write_report)
+from repro.analysis.rules import ALL_RULES, Finding
+
+__all__ = ["ALL_RULES", "Finding", "contracts", "lint_paths", "make_report",
+           "unsuppressed", "write_report"]

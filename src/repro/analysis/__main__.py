@@ -1,0 +1,59 @@
+"""CLI for the repro.analysis linter.
+
+  python -m repro.analysis lint src            # exit 1 on new findings
+  python -m repro.analysis report src tests benchmarks --out lint.json
+  python -m repro.analysis lint src --rules R3,R6
+
+``lint`` prints findings and fails on unsuppressed ones (suppressed ones
+print with a ``(noqa)`` marker under ``--verbose``); ``report`` always
+exits 0 and emits the full JSON report (CI uploads it as an artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import lint
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("command", choices=["lint", "report"])
+    ap.add_argument("paths", nargs="+", help="files / directories to lint")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids (default: all)")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON report to this file")
+    ap.add_argument("--verbose", action="store_true",
+                    help="also print suppressed (noqa) findings")
+    args = ap.parse_args(argv)
+
+    rules = [r.strip().upper() for r in args.rules.split(",")] \
+        if args.rules else None
+    findings = lint.lint_paths(args.paths, rules=rules)
+    report = lint.make_report(findings, args.paths)
+    if args.out:
+        lint.write_report(report, args.out)
+
+    if args.command == "report":
+        if not args.out:
+            json.dump(report, sys.stdout, indent=2)
+            print()
+        else:
+            print(f"wrote {args.out}: {report['total']} findings "
+                  f"({report['unsuppressed']} unsuppressed)")
+        return 0
+
+    shown = findings if args.verbose else lint.unsuppressed(findings)
+    for f in shown:
+        print(f)
+    bad = lint.unsuppressed(findings)
+    n_noqa = len(findings) - len(bad)
+    print(f"repro.analysis: {len(bad)} finding(s), "
+          f"{n_noqa} suppressed via noqa")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

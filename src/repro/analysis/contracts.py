@@ -1,0 +1,465 @@
+"""Runtime contract guards for the federated engines (layer 2 of
+repro.analysis).
+
+The static linter (repro.analysis.lint) catches JAX hazards it can see in
+the source; this module catches the ones only visible at runtime:
+
+* **transfer guard** — :func:`no_host_transfers` forbids implicit
+  device->host conversions (``float()``, ``np.asarray``, ``.item()``, …)
+  inside the engines' hot loops.  Intended syncs are whitelisted with
+  :func:`expected_transfer`.  Implemented by patching the concrete jax
+  array class's host-conversion hooks, because
+  ``jax.transfer_guard_device_to_host`` is inert on the CPU backend (both
+  live on the same memory space, so XLA never issues a "transfer").
+* **NaN/Inf tripwires** — :func:`assert_finite`, a checkify-backed
+  finiteness check over a pytree's inexact leaves (aggregation outputs,
+  post-round globals).
+* **compile budgets** — :func:`check_compile_budget` asserts every engine
+  seam holds at most ONE compiled program per shape signature (the
+  invariant previously duplicated as ad-hoc ``_cache_size()`` asserts in
+  tests/test_sharded_engine.py and tests/test_async_engine.py).
+* **domain invariants** — Eq. 2 masks 0/1 and block-constant at
+  ``mask_block`` granularity with a selected ratio ~ P
+  (:func:`check_mask_invariants`), staleness weights in (0, 1] and
+  monotone (:func:`check_staleness`), and the snapshot ring never evicting
+  a live anchor (:func:`check_ring` / :func:`check_snapshot_bound`).
+* **@contract** — a decorator attaching pre/post checks at library seams
+  (soft_train.begin_cycle, aggregation.*, selection.select_masks,
+  kernels.ops.*).  Checkers skip traced values, so decorated functions
+  stay jit/vmap/shard_map-safe.
+
+Everything compiles out under ``REPRO_CONTRACTS=off`` (the default): each
+guard is a single cheap boolean test and the array-class patch is never
+installed, so benchmarks measure the real engines.  Enable with
+``REPRO_CONTRACTS=on`` or in-process via :func:`override`.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ContractError(AssertionError):
+    """A runtime contract was violated (raised only with contracts on)."""
+
+
+_TLS = threading.local()
+
+#: cheap monotone counters, exported into BENCH_*.json by the benchmark
+#: harness; only written when contracts are enabled
+counters = {
+    "guarded_sections": 0,
+    "expected_transfers": 0,
+    "blocked_transfers": 0,
+    "finite_checks": 0,
+    "mask_checks": 0,
+    "staleness_checks": 0,
+    "ring_checks": 0,
+    "compile_checks": 0,
+}
+
+
+def reset_counters() -> dict:
+    """Zero all counters; returns the dict (benches snapshot per phase)."""
+    for k in counters:
+        counters[k] = 0
+    return counters
+
+
+def _env_enabled() -> bool:
+    return os.environ.get("REPRO_CONTRACTS", "off").strip().lower() in (
+        "on", "1", "true", "yes")
+
+
+def enabled() -> bool:
+    """Contracts on?  A session :func:`override` beats ``REPRO_CONTRACTS``."""
+    ov = getattr(_TLS, "override", None)
+    return _env_enabled() if ov is None else ov
+
+
+@contextlib.contextmanager
+def override(value: bool):
+    """Force contracts on/off for a scope (tests/benches flip in-process)."""
+    prev = getattr(_TLS, "override", None)
+    _TLS.override = bool(value)
+    try:
+        yield
+    finally:
+        _TLS.override = prev
+
+
+def has_tracers(*trees) -> bool:
+    """True when any leaf of any pytree is a jax tracer (checkers bail:
+    value-level contracts only run on concrete arrays)."""
+    return any(isinstance(x, jax.core.Tracer)
+               for t in trees for x in jax.tree.leaves(t))
+
+
+# ---------------------------------------------------------------------------
+# transfer guard
+# ---------------------------------------------------------------------------
+
+_GUARD_INSTALLED = False
+#: host-conversion hooks of the concrete array class; each is an implicit
+#: device->host sync when called on a device array
+_HOST_HOOKS = ("__array__", "__float__", "__int__", "__bool__",
+               "__complex__", "item", "tolist")
+
+
+def _guard_depth() -> int:
+    return getattr(_TLS, "guard_depth", 0)
+
+
+def _allow_depth() -> int:
+    return getattr(_TLS, "allow_depth", 0)
+
+
+def _install_guard() -> None:
+    """Patch the concrete jax array class so host-conversion hooks raise
+    inside guarded sections.  Installed lazily on the FIRST enabled guard
+    (a process that never enables contracts never pays the indirection);
+    jit tracing/lowering never calls these hooks — device closure constants
+    are consumed through the C++ dispatch path — so the guard can stay
+    active across warm-up compiles without false positives."""
+    global _GUARD_INSTALLED
+    if _GUARD_INSTALLED:
+        return
+    array_cls = type(jnp.zeros(()))
+
+    def _wrap(name, orig):
+        def hook(self, *args, **kwargs):
+            if _guard_depth() > 0 and _allow_depth() == 0 and enabled():
+                counters["blocked_transfers"] += 1
+                tag = getattr(_TLS, "guard_tag", "?")
+                raise ContractError(
+                    f"implicit device->host transfer ({name}) inside "
+                    f"guarded section {tag!r}; wrap intended syncs in "
+                    "contracts.expected_transfer(...)")
+            return orig(self, *args, **kwargs)
+        hook.__name__ = name
+        return hook
+
+    for name in _HOST_HOOKS:
+        orig = getattr(array_cls, name, None)
+        if orig is not None:
+            setattr(array_cls, name, _wrap(name, orig))
+
+    # numpy converts jax arrays through the C-level buffer protocol, never
+    # touching the Python dunders above — wrap the numpy entry points too
+    # (passthrough unless the operand is a device array in a guarded
+    # section; callers that froze ``from numpy import asarray`` before the
+    # first enabled guard are the static linter's (R3) territory)
+    def _np_wrap(fname, orig):
+        @functools.wraps(orig)
+        def hook(obj, *args, **kwargs):
+            if isinstance(obj, array_cls) and _guard_depth() > 0 and \
+                    _allow_depth() == 0 and enabled():
+                counters["blocked_transfers"] += 1
+                tag = getattr(_TLS, "guard_tag", "?")
+                raise ContractError(
+                    f"implicit device->host transfer (numpy.{fname}) "
+                    f"inside guarded section {tag!r}; wrap intended syncs "
+                    "in contracts.expected_transfer(...)")
+            return orig(obj, *args, **kwargs)
+        return hook
+
+    for fname in ("asarray", "array"):
+        setattr(np, fname, _np_wrap(fname, getattr(np, fname)))
+    _GUARD_INSTALLED = True
+
+
+@contextlib.contextmanager
+def no_host_transfers(tag: str):
+    """Forbid implicit device->host conversions while the block runs.
+
+    Engine hot loops (run_sync's train step, run_async's bucket step) wrap
+    themselves in this; anything that silently pulls a device array to host
+    inside — ``float(loss)``, ``np.asarray(ratios)``, ``if device_scalar:``
+    — raises :class:`ContractError` instead of hiding a sync."""
+    if not enabled():
+        yield
+        return
+    _install_guard()
+    counters["guarded_sections"] += 1
+    prev_tag = getattr(_TLS, "guard_tag", None)
+    _TLS.guard_tag = tag
+    _TLS.guard_depth = _guard_depth() + 1
+    try:
+        yield
+    finally:
+        _TLS.guard_depth -= 1
+        _TLS.guard_tag = prev_tag
+
+
+@contextlib.contextmanager
+def expected_transfer(tag: str):
+    """Mark an INTENDED device->host sync inside a guarded section (eval
+    metrics, host-resident population scatters, the contract checkers'
+    own materializations)."""
+    if not enabled() or _guard_depth() == 0:
+        yield
+        return
+    counters["expected_transfers"] += 1
+    _TLS.allow_depth = _allow_depth() + 1
+    try:
+        yield
+    finally:
+        _TLS.allow_depth -= 1
+
+
+# ---------------------------------------------------------------------------
+# checkify-backed NaN/Inf tripwire
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _finite_checker(n_leaves: int):
+    from jax.experimental import checkify
+
+    def body(leaves):
+        for i in range(n_leaves):
+            checkify.check(jnp.all(jnp.isfinite(leaves[i])),
+                           "non-finite values in leaf " + str(i))
+        return jnp.zeros((), jnp.int32)
+
+    return jax.jit(checkify.checkify(body))
+
+
+def assert_finite(tree, tag: str = "params") -> None:
+    """checkify-backed NaN/Inf tripwire over a pytree's inexact leaves.
+
+    No-op when contracts are off or any leaf is traced (the eager engine
+    seams are where poisoned aggregations must be caught)."""
+    if not enabled():
+        return
+    leaves = tuple(x for x in jax.tree.leaves(tree)
+                   if hasattr(x, "dtype")
+                   and jnp.issubdtype(x.dtype, jnp.inexact))
+    if not leaves or has_tracers(leaves):
+        return
+    counters["finite_checks"] += 1
+    err, _ = _finite_checker(len(leaves))(leaves)
+    with expected_transfer("contracts.assert_finite[" + tag + "]"):
+        try:
+            err.throw()
+        except ContractError:
+            raise
+        except Exception as e:
+            raise ContractError(f"{tag}: {e}") from e
+
+
+# ---------------------------------------------------------------------------
+# domain invariants
+# ---------------------------------------------------------------------------
+
+
+def check_mask_invariants(masks, volume=None, block: int = 0, *,
+                          tag: str = "masks", slack: int = 1) -> None:
+    """Eq. 2 mask contract: 0/1-valued, block-constant at ``block``
+    granularity (for unit types wide enough to pool, n >= 4*block, matching
+    core.selection.select_masks), and — when ``volume`` is given — a
+    selected count per row within ``slack`` blocks/units of
+    ``clip(round(P * n), 1, n)``.
+
+    ``masks``: {unit type: (..., L, n)} float arrays (leading client axes
+    allowed).  Pass ``volume=None`` to check structure only (post-run
+    state sweeps, where the stored volume has drifted past the volume the
+    last selection used)."""
+    if not enabled() or has_tracers(masks, volume):
+        return
+    counters["mask_checks"] += 1
+    with expected_transfer("contracts.check_mask_invariants[" + tag + "]"):
+        vol = None if volume is None else float(np.asarray(volume))
+        for key in sorted(masks):
+            m = np.asarray(masks[key], np.float32)
+            if not np.all((m == 0.0) | (m == 1.0)):
+                raise ContractError(
+                    f"{tag}/{key}: mask values outside {{0, 1}}")
+            n = m.shape[-1]
+            rows = m.reshape(-1, n)
+            if block and n >= 4 * block:
+                nb = -(-n // block)
+                pad = nb * block - n
+                # edge-padding keeps the ragged tail block's constancy
+                # check honest: the pad repeats the last REAL value
+                mp = np.pad(rows, ((0, 0), (0, pad)), mode="edge")
+                grouped = mp.reshape(rows.shape[0], nb, block)
+                if not np.all(grouped == grouped[..., :1]):
+                    raise ContractError(
+                        f"{tag}/{key}: mask not block-constant at "
+                        f"mask_block={block}")
+                counts = grouped[..., 0].sum(-1)
+                total = nb
+            else:
+                counts = rows.sum(-1)
+                total = n
+            if vol is not None:
+                exp = np.clip(np.round(np.float32(vol) * total), 1, total)
+                if np.any(np.abs(counts - exp) > slack):
+                    raise ContractError(
+                        f"{tag}/{key}: selected counts {counts.tolist()} "
+                        f"vs expected ~{int(exp)} of {total} "
+                        f"(P={vol:.4f}, slack={slack})")
+
+
+def check_staleness(stales, weights=None, a: float = 0.5, *,
+                    tag: str = "staleness") -> None:
+    """AFO staleness contract: staleness >= 0; the polynomial discounts
+    (s + 1)^-a lie in (0, 1] and are monotone non-increasing in s; when
+    the traced program's ``weights`` are passed they must match the host
+    formula."""
+    if not enabled() or has_tracers(stales, weights):
+        return
+    counters["staleness_checks"] += 1
+    with expected_transfer("contracts.check_staleness[" + tag + "]"):
+        s = np.asarray(stales, np.float64).reshape(-1)
+        if s.size == 0:
+            return
+        if np.any(s < 0):
+            raise ContractError(f"{tag}: negative staleness {s.min()}")
+        w = (s + 1.0) ** (-a)
+        if np.any(w <= 0.0) or np.any(w > 1.0 + 1e-9):
+            raise ContractError(f"{tag}: weights outside (0, 1]")
+        order = np.argsort(s)
+        if np.any(np.diff(w[order]) > 1e-9):
+            raise ContractError(
+                f"{tag}: staleness weights not monotone non-increasing")
+        if weights is not None:
+            wg = np.asarray(weights, np.float64).reshape(-1)[:s.size]
+            if np.any(np.abs(wg - w) > 1e-5):
+                raise ContractError(
+                    f"{tag}: traced weights diverge from (s+1)^-{a}")
+
+
+def check_ring(ring_or_alloc, n_clients=None, *,
+               tag: str = "snapshot-ring") -> None:
+    """Snapshot-ring contract: no anchored snapshot was ever evicted, and
+    live anchors stay within the ring's data slots (and the client count —
+    each client anchors at most one snapshot)."""
+    if not enabled():
+        return
+    counters["ring_checks"] += 1
+    alloc = getattr(ring_or_alloc, "alloc", ring_or_alloc)
+    if alloc.anchor_misses:
+        raise ContractError(
+            f"{tag}: {alloc.anchor_misses} anchored snapshots were evicted")
+    live = alloc.live_slots()
+    if live > alloc.slots - 1:
+        raise ContractError(
+            f"{tag}: {live} live anchors exceed {alloc.slots - 1} data slots")
+    if n_clients is not None and live > n_clients:
+        raise ContractError(
+            f"{tag}: {live} live anchors for {n_clients} clients")
+    if alloc.peak_live > alloc.slots - 1:
+        raise ContractError(
+            f"{tag}: peak live {alloc.peak_live} exceeded the ring")
+
+
+def check_snapshot_bound(peak: int, anchor_misses: int, cap: int,
+                         n_clients: int, *, tag: str = "snapshots") -> None:
+    """Dict-snapshot contract (sequential async loop): anchors are never
+    evicted and the store stays bounded by cap + live anchors."""
+    if not enabled():
+        return
+    counters["ring_checks"] += 1
+    if anchor_misses:
+        raise ContractError(
+            f"{tag}: {anchor_misses} anchored snapshots were evicted")
+    if peak > cap + n_clients + 1:
+        raise ContractError(
+            f"{tag}: snapshot peak {peak} exceeds cap {cap} + "
+            f"{n_clients} anchors")
+
+
+# ---------------------------------------------------------------------------
+# compile budgets
+# ---------------------------------------------------------------------------
+
+
+def compile_report(run) -> dict:
+    """Compiled-program census for an engine: jit cache size per seam.
+
+    Keys: ``local_train`` / ``eval_chunk`` (int), ``round`` (per
+    shape-signature dict over the LRU program cache — covers the batched
+    AND sharded round programs), ``bucket`` (per padded-bucket-size dict).
+    Written into BENCH_*.json by the benchmark harness."""
+    rep = {}
+    for name in ("_local_train", "_eval_chunk"):
+        fn = getattr(run, name, None)
+        if fn is not None and hasattr(fn, "_cache_size"):
+            rep[name.lstrip("_")] = fn._cache_size()
+    cache = getattr(run, "_round_cache", None)
+    if cache:
+        rep["round"] = {repr(k): fn._cache_size() for k, fn in cache.items()
+                        if hasattr(fn, "_cache_size")}
+    bcache = getattr(run, "_bucket_cache", None)
+    if bcache:
+        rep["bucket"] = {int(k): fn._cache_size()
+                         for k, fn in bcache.items()}
+    return rep
+
+
+def check_compile_budget(run, *, max_per_signature: int = 1,
+                         max_eval_programs: int = 2,
+                         tag: str = "compile") -> None:
+    """One compiled program per engine per shape signature.
+
+    Round programs (one per (n_s, n_c) / sharded kpad key) and bucket
+    programs (one per padded bucket size) must each hold exactly one
+    compiled executable however many cohorts/buckets were drawn; the
+    shared local-train step likewise.  ``eval_chunk`` is allowed
+    ``max_eval_programs`` (full chunk + the ragged tail chunk)."""
+    if not enabled():
+        return
+    counters["compile_checks"] += 1
+    rep = compile_report(run)
+    over = []
+    if rep.get("local_train", 0) > max_per_signature:
+        over.append(f"local_train={rep['local_train']}")
+    if rep.get("eval_chunk", 0) > max_eval_programs:
+        over.append(f"eval_chunk={rep['eval_chunk']}")
+    for key, n in rep.get("round", {}).items():
+        if n > max_per_signature:
+            over.append(f"round[{key}]={n}")
+    for key, n in rep.get("bucket", {}).items():
+        if n > max_per_signature:
+            over.append(f"bucket[{key}]={n}")
+    if over:
+        raise ContractError(
+            f"{tag}: compile budget exceeded (max {max_per_signature} "
+            f"program per signature): " + ", ".join(over))
+
+
+# ---------------------------------------------------------------------------
+# the @contract decorator
+# ---------------------------------------------------------------------------
+
+
+def contract(pre=None, post=None):
+    """Attach contract checks to a library seam.
+
+    ``pre(*args, **kwargs)`` runs before the call, ``post(out, *args,
+    **kwargs)`` after.  With contracts off the wrapper is one boolean
+    test; checkers must tolerate traced inputs (shape-level checks may
+    run under jit, value-level checks should bail via
+    :func:`has_tracers`)."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            if not enabled():
+                return fn(*args, **kwargs)
+            if pre is not None:
+                pre(*args, **kwargs)
+            out = fn(*args, **kwargs)
+            if post is not None:
+                post(out, *args, **kwargs)
+            return out
+        wrapper.__wrapped__ = fn
+        return wrapper
+    return deco

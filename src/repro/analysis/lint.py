@@ -1,0 +1,140 @@
+"""Driver for the repro.analysis static linter (layer 1).
+
+Walks the given paths, parses each ``.py`` file once, runs every
+per-file rule (R1-R5 + R6's unused-import check) plus the project rule
+(R6 orphan modules), applies ``# repro: noqa[Rn]`` suppressions, and
+returns findings / a machine-readable JSON report.
+
+noqa semantics: ``# repro: noqa[R3]`` on the finding's line suppresses
+that rule there; a rule list (``noqa[R2,R3]``) or ``noqa[*]`` works too.
+Module-level findings (line 1, e.g. R6 orphans) accept the comment
+anywhere in the file's first 10 lines.  Suppressed findings stay in the
+JSON report (``suppressed: true``) so intentional exceptions remain
+visible; the ``lint`` CLI exits non-zero only on unsuppressed ones.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.rules import ALL_RULES, Finding, ModuleInfo, ProjectRule
+
+NOQA_RE = re.compile(r"#\s*repro:\s*noqa\[([A-Za-z0-9*,\s]+)\]")
+
+
+def _iter_py_files(paths: Sequence[str]) -> List[str]:
+    files: List[str] = []
+    for p in paths:
+        p = os.path.abspath(p)
+        if os.path.isfile(p):
+            files.append(p)
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git")]
+            files.extend(os.path.join(dirpath, f) for f in filenames
+                         if f.endswith(".py"))
+    return sorted(set(files))
+
+
+def _noqa_lines(source: str) -> Dict[int, set]:
+    """line number -> set of suppressed rule ids ('*' = all)."""
+    out: Dict[int, set] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = NOQA_RE.search(line)
+        if m:
+            rules = {r.strip().upper() for r in m.group(1).split(",")
+                     if r.strip()}
+            out[i] = rules
+    return out
+
+
+def _apply_noqa(findings: List[Finding],
+                noqa_by_path: Dict[str, Dict[int, set]]) -> None:
+    for f in findings:
+        noqa = noqa_by_path.get(f.path, {})
+        lines = [f.line]
+        if f.line == 1:                     # module-level finding
+            lines = list(range(1, 11))
+        for ln in lines:
+            rules = noqa.get(ln)
+            if rules and ("*" in rules or f.rule in rules):
+                f.suppressed = True
+                break
+
+
+def find_repo_root(files: Sequence[str]) -> Optional[str]:
+    """Nearest ancestor of a linted file that contains ``src/repro``."""
+    for f in files:
+        cur = os.path.dirname(os.path.abspath(f))
+        while cur != os.path.dirname(cur):
+            if os.path.isdir(os.path.join(cur, "src", "repro")):
+                return cur
+            cur = os.path.dirname(cur)
+    return None
+
+
+def lint_paths(paths: Sequence[str],
+               rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint every .py under ``paths``; returns ALL findings (check
+    ``.suppressed`` or use :func:`unsuppressed`)."""
+    files = _iter_py_files(paths)
+    selected = [r for r in ALL_RULES
+                if rules is None or r.id in set(rules)]
+    modules: List[ModuleInfo] = []
+    findings: List[Finding] = []
+    noqa_by_path: Dict[str, Dict[int, set]] = {}
+    for path in files:
+        try:
+            with open(path, encoding="utf-8") as fh:
+                source = fh.read()
+            tree = ast.parse(source)
+        except (OSError, SyntaxError) as e:
+            findings.append(Finding("E0", path, getattr(e, "lineno", 1) or 1,
+                                    0, f"could not parse: {e}"))
+            continue
+        mi = ModuleInfo(path, source, tree)
+        modules.append(mi)
+        noqa_by_path[path] = _noqa_lines(source)
+        for rule in selected:
+            findings.extend(rule.check(mi))
+    repo_root = find_repo_root(files)
+    for rule in selected:
+        if isinstance(rule, ProjectRule):
+            findings.extend(rule.check_project(modules, repo_root))
+    _apply_noqa(findings, noqa_by_path)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings
+
+
+def unsuppressed(findings: Sequence[Finding]) -> List[Finding]:
+    return [f for f in findings if not f.suppressed]
+
+
+def make_report(findings: Sequence[Finding],
+                paths: Sequence[str]) -> dict:
+    """Machine-readable lint report (uploaded as a CI artifact)."""
+    rel = os.getcwd()
+    by_rule: Dict[str, int] = {}
+    for f in findings:
+        if not f.suppressed:
+            by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+    return {
+        "tool": "repro.analysis",
+        "paths": list(paths),
+        "total": len(findings),
+        "unsuppressed": len(unsuppressed(findings)),
+        "by_rule": dict(sorted(by_rule.items())),
+        "findings": [
+            {**f.to_json(), "path": os.path.relpath(f.path, rel)}
+            for f in findings],
+    }
+
+
+def write_report(report: dict, out_path: str) -> None:
+    with open(out_path, "w", encoding="utf-8") as fh:
+        json.dump(report, fh, indent=2, sort_keys=False)
+        fh.write("\n")

@@ -1,0 +1,18 @@
+"""Rule registry for the repro.analysis linter (R1-R6)."""
+from repro.analysis.rules.base import Finding, ModuleInfo, ProjectRule, Rule
+from repro.analysis.rules.deadcode import DeadCodeRule
+from repro.analysis.rules.donation import DonationRule
+from repro.analysis.rules.host_sync import HostSyncRule
+from repro.analysis.rules.randomness import KeyReuseRule
+from repro.analysis.rules.retrace import RetraceRule
+from repro.analysis.rules.traced import TracedBranchRule
+
+#: instantiation order == report order
+ALL_RULES = (TracedBranchRule(), KeyReuseRule(), HostSyncRule(),
+             RetraceRule(), DonationRule(), DeadCodeRule())
+
+RULE_DOCS = {r.id: r.name for r in ALL_RULES}
+
+__all__ = ["ALL_RULES", "RULE_DOCS", "Finding", "ModuleInfo", "Rule",
+           "ProjectRule", "DeadCodeRule", "DonationRule", "HostSyncRule",
+           "KeyReuseRule", "RetraceRule", "TracedBranchRule"]

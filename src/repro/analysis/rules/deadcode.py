@@ -1,0 +1,268 @@
+"""R6 — dead code: unused imports (per file) + orphan modules (project).
+
+**Unused imports**: an imported binding never referenced in the file (a
+name load, an attribute root, or an ``__all__`` string).  ``__init__.py``
+files are exempt (re-export surface).
+
+**Orphan modules**: a ``src/repro`` module unreachable from the repo's
+executable surface.  Liveness roots are
+
+* every module under ``examples/`` and ``benchmarks/``, and
+* every module named by a ``-m repro.x.y`` execution string or a bare
+  ``"repro.x.y"`` string literal (e.g. a subprocess argv element)
+  anywhere in the repo's .py files or CI workflows — a module's own
+  docstring/comments do not keep it alive;
+
+liveness propagates through name-level imports, with ``from package
+import name`` resolved through the package ``__init__``'s re-export
+table to the defining submodule.  A package ``__init__`` import only
+counts as an edge when the bound name is actually *used* in the init
+body — a pure re-export (``__all__`` string only) keeps a submodule
+alive only if some live consumer imports it through the package.
+Test imports are deliberately NOT roots: a module only tests exercise
+has no production caller — exactly the state worth surfacing (today:
+``optim/compression.py``, ``launch/serve.py``).  Intentional orphans
+carry a module-level ``# repro: noqa[R6]`` and stay visible in the
+JSON report.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.rules import base
+
+_DASH_M = re.compile(r"-m\s+(repro(?:\.\w+)+)")
+_MODPATH = re.compile(r"repro(?:\.\w+)+")
+_REF_DIRS = ("src", "tests", "benchmarks", "examples")
+_ROOT_DIRS = ("benchmarks", "examples")
+
+
+class DeadCodeRule(base.ProjectRule):
+    id = "R6"
+    name = "dead-code"
+
+    # -- per-file: unused imports ---------------------------------------
+    def check(self, mi: base.ModuleInfo) -> List[base.Finding]:
+        fname = os.path.basename(mi.path)
+        if fname == "__init__.py":
+            return []
+        out: List[base.Finding] = []
+        bindings: Dict[str, ast.stmt] = {}
+        for node in ast.walk(mi.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    bindings[(a.asname or a.name).split(".")[0]] = node
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "__future__":
+                    continue
+                for a in node.names:
+                    if a.name == "*":
+                        return []           # can't reason about the file
+                    bindings[a.asname or a.name] = node
+        if not bindings:
+            return out
+        used: Set[str] = set()
+        for node in ast.walk(mi.tree):
+            if isinstance(node, ast.Name) and not isinstance(
+                    getattr(node, "_repro_parent", None),
+                    (ast.Import, ast.ImportFrom)):
+                used.add(node.id)
+            elif isinstance(node, ast.Constant) and \
+                    isinstance(node.value, str):
+                used.add(node.value)        # __all__ / getattr strings
+            elif isinstance(node, ast.Attribute):
+                used.add(node.attr)
+        for name, node in sorted(bindings.items(),
+                                 key=lambda kv: kv[1].lineno):
+            if name not in used:
+                out.append(self.finding(
+                    mi, node, f"imported name {name!r} is never used"))
+        return out
+
+    # -- project: orphan modules ----------------------------------------
+    def check_project(self, modules: List[base.ModuleInfo],
+                      repo_root: Optional[str]) -> List[base.Finding]:
+        if repo_root is None:
+            return []
+        src_root = os.path.join(repo_root, "src")
+        infos = self._parse_tree(repo_root)
+        mod_of_path = {p: self._module_name(p, src_root)
+                       for p in infos if p.startswith(src_root)}
+        all_mods = {m for m in mod_of_path.values() if m}
+        exports = self._export_tables(infos, mod_of_path)
+        edges = {m: set() for m in all_mods}
+        for path, info in infos.items():
+            src_mod = mod_of_path.get(path)
+            for target in self._imported_modules(info, all_mods, exports):
+                if src_mod:                 # src -> src dependency edge
+                    edges[src_mod].add(target)
+        alive: Set[str] = set()
+        queue: List[str] = []
+        for path, info in infos.items():
+            rel = os.path.relpath(path, repo_root)
+            if rel.split(os.sep)[0] in _ROOT_DIRS:
+                queue.extend(self._imported_modules(info, all_mods, exports))
+            for m in self._entry_refs(info, mod_of_path.get(path)):
+                if m in all_mods:
+                    queue.append(m)
+        queue.extend(self._workflow_refs(repo_root, all_mods))
+        while queue:
+            m = queue.pop()
+            if m in alive:
+                continue
+            alive.add(m)
+            queue.extend(edges.get(m, ()))
+            # a live module keeps its package __init__s live
+            parts = m.split(".")
+            for i in range(1, len(parts)):
+                queue.append(".".join(parts[:i]))
+        out: List[base.Finding] = []
+        linted = {m.path for m in modules}
+        for path, mod in sorted(mod_of_path.items()):
+            if not mod or mod in alive:
+                continue
+            if os.path.basename(path) in ("__init__.py", "__main__.py") or \
+                    mod.startswith("repro.analysis"):
+                continue
+            if path not in linted:
+                continue                    # only report on linted files
+            out.append(base.Finding(
+                self.id, path, 1, 0,
+                f"module {mod} is an orphan: no production caller "
+                "(examples/benchmarks/-m entry points) reaches it",
+            ))
+        return out
+
+    # -- helpers ---------------------------------------------------------
+    def _parse_tree(self, repo_root: str) -> Dict[str, base.ModuleInfo]:
+        infos: Dict[str, base.ModuleInfo] = {}
+        for d in _REF_DIRS:
+            top = os.path.join(repo_root, d)
+            for dirpath, dirnames, filenames in os.walk(top):
+                dirnames[:] = [x for x in dirnames
+                               if x not in ("__pycache__", ".git")]
+                for f in filenames:
+                    if not f.endswith(".py"):
+                        continue
+                    path = os.path.join(dirpath, f)
+                    try:
+                        with open(path, encoding="utf-8") as fh:
+                            src = fh.read()
+                        infos[path] = base.ModuleInfo(
+                            path, src, ast.parse(src))
+                    except (OSError, SyntaxError):
+                        continue
+        return infos
+
+    def _module_name(self, path: str, src_root: str) -> Optional[str]:
+        rel = os.path.relpath(path, src_root)
+        if rel.startswith(".."):
+            return None
+        parts = rel[:-3].split(os.sep)      # strip .py
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts)
+
+    def _export_tables(self, infos, mod_of_path) -> Dict[str, Dict[str, str]]:
+        """package -> {exported name: defining submodule} from each
+        ``__init__.py``'s import statements."""
+        tables: Dict[str, Dict[str, str]] = {}
+        for path, info in infos.items():
+            if os.path.basename(path) != "__init__.py":
+                continue
+            pkg = mod_of_path.get(path)
+            if not pkg:
+                continue
+            table: Dict[str, str] = {}
+            for node in ast.walk(info.tree):
+                if isinstance(node, ast.ImportFrom) and node.module:
+                    mod = node.module if node.level == 0 else \
+                        pkg + "." + node.module
+                    for a in node.names:
+                        if a.name != "*":
+                            table[a.asname or a.name] = mod
+                elif isinstance(node, ast.Import):
+                    for a in node.names:
+                        table[(a.asname or a.name).split(".")[0]] = a.name
+            tables[pkg] = table
+        return tables
+
+    def _imported_modules(self, info: base.ModuleInfo, all_mods: Set[str],
+                          exports) -> List[str]:
+        """src modules this file depends on, with from-package imports
+        resolved through __init__ export tables.  In an ``__init__.py``,
+        a binding only creates an edge when the init body uses the name
+        itself — pure re-exports (``__all__`` strings) don't pin their
+        submodule; consumers importing through the package do."""
+        is_init = os.path.basename(info.path) == "__init__.py"
+        used: Set[str] = set()
+        if is_init:
+            used = {n.id for n in ast.walk(info.tree)
+                    if isinstance(n, ast.Name)}
+        deps: List[str] = []
+        for node in ast.walk(info.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    bound = (a.asname or a.name).split(".")[0]
+                    if a.name in all_mods and \
+                            (not is_init or bound in used):
+                        deps.append(a.name)
+            elif isinstance(node, ast.ImportFrom):
+                if node.level or not node.module or \
+                        not node.module.startswith("repro"):
+                    continue
+                for a in node.names:
+                    if is_init and (a.asname or a.name) not in used:
+                        continue
+                    full = f"{node.module}.{a.name}"
+                    if full in all_mods:    # from pkg import submodule
+                        deps.append(full)
+                    elif node.module in all_mods:
+                        # from pkg import name: resolve through the
+                        # package __init__'s re-export table
+                        target = exports.get(node.module, {}).get(a.name)
+                        deps.append(target if target in all_mods
+                                    else node.module)
+        return deps
+
+    def _entry_refs(self, info: base.ModuleInfo,
+                    own_mod: Optional[str]) -> List[str]:
+        """Execution-surface references: ``-m repro.x.y`` in source text
+        plus bare ``"repro.x.y"`` string literals outside docstrings
+        (subprocess argv style, ``["-m", "repro.launch.dryrun"]``)."""
+        refs = [m for m in _DASH_M.findall(info.source) if m != own_mod]
+        doc_positions = set()
+        for node in ast.walk(info.tree):
+            if isinstance(node, (ast.Module, ast.ClassDef, ast.FunctionDef,
+                                 ast.AsyncFunctionDef)):
+                body = node.body
+                if body and isinstance(body[0], ast.Expr) and \
+                        isinstance(body[0].value, ast.Constant) and \
+                        isinstance(body[0].value.value, str):
+                    doc_positions.add(id(body[0].value))
+        for node in ast.walk(info.tree):
+            if isinstance(node, ast.Constant) and \
+                    isinstance(node.value, str) and \
+                    id(node) not in doc_positions and \
+                    _MODPATH.fullmatch(node.value) and \
+                    node.value != own_mod:
+                refs.append(node.value)
+        return refs
+
+    def _workflow_refs(self, repo_root: str, all_mods: Set[str]) -> List[str]:
+        refs: List[str] = []
+        wf = os.path.join(repo_root, ".github", "workflows")
+        if not os.path.isdir(wf):
+            return refs
+        for f in os.listdir(wf):
+            if f.endswith((".yml", ".yaml")):
+                try:
+                    with open(os.path.join(wf, f), encoding="utf-8") as fh:
+                        refs.extend(m for m in _DASH_M.findall(fh.read())
+                                    if m in all_mods)
+                except OSError:
+                    continue
+        return refs

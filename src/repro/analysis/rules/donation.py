@@ -1,0 +1,171 @@
+"""R5 — donated-buffer use-after-donate.
+
+``jax.jit(f, donate_argnums=...)`` lets XLA reuse the donated argument's
+buffer for the output; after the call the donated array is DELETED and
+any later read raises (or, on some backends, silently reads garbage).
+The async engine's snapshot ring donates the globals + the whole ring
+every bucket — the sanctioned pattern reassigns the donated names in the
+same statement (``g, ring, _ = fn(g, ring, ...)``), which this rule
+recognizes as safe.
+
+Flagged: a name/attribute donated to a jit-bound callable and then read
+again in the same scope before being reassigned, and the same expression
+donated twice in one call (aliased donation).
+
+Scope: direct-name bindings only (``fn = jax.jit(..., donate_argnums=)``
+then ``fn(...)`` in the same file); donations routed through containers
+or factory returns need the runtime transfer/compile contracts instead.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from repro.analysis.rules import base
+
+JIT_WRAPPERS = {"jax.jit", "jax.pmap"}
+
+
+def _expr_key(node) -> str:
+    """Stable identity for a Name/Attribute chain (``ring.params``) —
+    ctx-insensitive, so a Load of ``g`` matches the Store that
+    reassigned it."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        return ".".join([node.id] + list(reversed(parts)))
+    return ""
+
+
+class DonationRule(base.Rule):
+    id = "R5"
+    name = "use-after-donate"
+
+    def check(self, mi: base.ModuleInfo) -> List[base.Finding]:
+        out: List[base.Finding] = []
+        donating: Dict[str, Set[int]] = {}
+        for node in ast.walk(mi.tree):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    mi.resolve(node.value.func) in JIT_WRAPPERS:
+                nums: Set[int] = set()
+                for kw in node.value.keywords:
+                    if kw.arg == "donate_argnums":
+                        nums |= self._ints(kw.value)
+                if nums:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            donating[t.id] = nums
+        if not donating:
+            return out
+        for scope in [mi.tree] + [n for n in ast.walk(mi.tree)
+                                  if isinstance(n, (ast.FunctionDef,
+                                                    ast.AsyncFunctionDef))]:
+            self._check_scope(mi, scope, donating, out)
+        return out
+
+    def _ints(self, node) -> Set[int]:
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return {node.value}
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return {e.value for e in node.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, int)}
+        return set()
+
+    def _check_scope(self, mi, scope, donating, out) -> None:
+        stmts = [s for s in ast.walk(scope)
+                 if isinstance(s, ast.stmt) and self._owner(s) is scope]
+        stmts.sort(key=lambda s: (s.lineno, s.col_offset))
+        for si, stmt in enumerate(stmts):
+            # only calls whose innermost owning statement is ``stmt``: a
+            # call in a loop body belongs to the body statement (whose
+            # targets decide reassignment), not to the enclosing loop
+            for call in self._own_calls(stmt):
+                if not isinstance(call.func, ast.Name) or \
+                        call.func.id not in donating:
+                    continue
+                donated = []                # (key, arg node)
+                for i in sorted(donating[call.func.id]):
+                    if i < len(call.args):
+                        k = _expr_key(call.args[i])
+                        if k:
+                            if any(k == kk for kk, _ in donated):
+                                out.append(self.finding(
+                                    mi, call.args[i],
+                                    "same buffer donated twice in one "
+                                    "call — aliased donation"))
+                            donated.append((k, call.args[i]))
+                targets = self._stmt_targets(stmt)
+                for k, arg in donated:
+                    if k in targets:
+                        continue            # reassigned by the same stmt
+                    use = self._later_read(stmts[si + 1:], k)
+                    if use is not None:
+                        out.append(self.finding(
+                            mi, use,
+                            f"donated argument {ast.unparse(arg)!r} read "
+                            "after donation — the buffer no longer "
+                            "exists; reassign it from the call's output"))
+        return
+
+    def _own_calls(self, stmt) -> List[ast.Call]:
+        """Calls in ``stmt`` not nested inside a child statement."""
+        out: List[ast.Call] = []
+
+        def visit(node, top=False):
+            if not top and isinstance(node, ast.stmt):
+                return
+            if isinstance(node, ast.Call):
+                out.append(node)
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+
+        visit(stmt, top=True)
+        return out
+
+    def _owner(self, node):
+        for p in base.parents(node):
+            if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda, ast.Module)):
+                return p
+        return None
+
+    def _stmt_targets(self, stmt) -> Set[str]:
+        targets: Set[str] = set()
+        tnodes = []
+        if isinstance(stmt, ast.Assign):
+            tnodes = stmt.targets
+        elif isinstance(stmt, ast.AugAssign):
+            tnodes = [stmt.target]
+        for t in tnodes:
+            if isinstance(t, (ast.Tuple, ast.List)):
+                for e in t.elts:
+                    k = _expr_key(e)
+                    if k:
+                        targets.add(k)
+            else:
+                k = _expr_key(t)
+                if k:
+                    targets.add(k)
+        return targets
+
+    def _later_read(self, stmts, key):
+        """First Load of ``key`` in later statements before a reassign."""
+        for stmt in stmts:
+            if key in self._stmt_targets(stmt):
+                # reassigned: reads inside the SAME statement's value are
+                # fine only if they are the assignment source — treat a
+                # read in the value as a use-after-donate first
+                for sub in ast.walk(stmt.value) \
+                        if isinstance(stmt, ast.Assign) else []:
+                    if _expr_key(sub) == key:
+                        return sub
+                return None
+            for sub in ast.walk(stmt):
+                if _expr_key(sub) == key and \
+                        isinstance(getattr(sub, "ctx", None), ast.Load):
+                    return sub
+        return None

@@ -1,0 +1,73 @@
+"""R3 — host-sync hazards inside round/bucket loops.
+
+``float(x)``, ``int(x)``, ``np.asarray(x)``, ``x.item()``, ``x.tolist()``
+on a device array block the host on the device stream.  Outside a loop
+that is a deliberate sync point; inside the engines' per-round /
+per-event loops it serializes dispatch against execution and silently
+destroys pipelining.  Device results consumed by host bookkeeping should
+be converted once, after the loop (or behind the eval gate), and
+intended in-loop syncs (metrics) marked ``# repro: noqa[R3]``.
+
+Device-ness is a name-level taint: ``jax.*`` calls, calls through
+``jax.jit``-bound names, and private ``self._*`` engine methods seed the
+taint; assignments propagate it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.rules import base
+
+#: builtins/numpy entry points that force a device->host sync when handed
+#: a device array
+SYNC_BUILTINS = {"float", "int", "bool"}
+SYNC_NUMPY = {"numpy.asarray", "numpy.array", "numpy.float32",
+              "numpy.float64", "numpy.int32", "numpy.int64"}
+SYNC_METHODS = {"item", "tolist"}
+
+
+class HostSyncRule(base.Rule):
+    id = "R3"
+    name = "host-sync-in-loop"
+
+    def check(self, mi: base.ModuleInfo) -> List[base.Finding]:
+        out: List[base.Finding] = []
+        fns = [n for n in ast.walk(mi.tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        traced = mi.traced_functions()
+        for fn in fns:
+            if fn in traced:
+                continue                    # R1's territory
+            taint = base.device_tainted_names(mi, fn)
+            if not taint:
+                continue
+            for loop in ast.walk(fn):
+                if not isinstance(loop, (ast.For, ast.AsyncFor, ast.While)):
+                    continue
+                for node in ast.walk(loop):
+                    hit = self._sync_call(mi, node, taint)
+                    if hit:
+                        out.append(self.finding(mi, node, hit))
+        return out
+
+    def _sync_call(self, mi, node, taint) -> str:
+        if not isinstance(node, ast.Call):
+            return ""
+        path = mi.resolve(node.func)
+        if isinstance(node.func, ast.Name) and \
+                node.func.id in SYNC_BUILTINS and len(node.args) == 1:
+            if base.expr_uses_device_value(mi, node.args[0], taint):
+                return (f"{node.func.id}() on a device value inside a "
+                        "loop — implicit device->host sync per iteration; "
+                        "convert once after the loop")
+        if path in SYNC_NUMPY and node.args:
+            if base.expr_uses_device_value(mi, node.args[0], taint):
+                return (f"{path}() on a device value inside a loop — "
+                        "implicit device->host copy per iteration")
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr in SYNC_METHODS and not node.args:
+            if base.expr_uses_device_value(mi, node.func.value, taint):
+                return (f".{node.func.attr}() on a device value inside a "
+                        "loop — implicit device->host sync per iteration")
+        return ""

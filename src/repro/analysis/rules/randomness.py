@@ -1,0 +1,167 @@
+"""R2 — jax.random key reuse / missing split along a dataflow path.
+
+A PRNG key consumed by two samplers yields correlated draws; a key
+consumed inside a loop without per-iteration re-derivation yields the
+SAME draw every iteration.  Keys must be re-derived (``split`` /
+``fold_in``) between consumptions — deriving subkeys is not consumption,
+so the repo's ``fold_in(key, i)`` streams pass.
+
+The analysis is scope-local and order-based: statements are walked in
+source order; branches are merged pessimistically (a consumption on
+either side counts).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from repro.analysis.rules import base
+
+#: jax.random functions that DERIVE keys instead of consuming entropy
+DERIVERS = {"split", "fold_in", "PRNGKey", "key", "key_data",
+            "wrap_key_data", "clone"}
+#: calls whose result is a key (or tuple/array of keys)
+KEY_MAKERS = {"jax.random.PRNGKey", "jax.random.key", "jax.random.split",
+              "jax.random.fold_in", "jax.random.wrap_key_data",
+              "jax.random.clone"}
+
+
+def _is_sampler(path: str) -> bool:
+    return path is not None and path.startswith("jax.random.") and \
+        path.rsplit(".", 1)[-1] not in DERIVERS
+
+
+class KeyReuseRule(base.Rule):
+    id = "R2"
+    name = "key-reuse"
+
+    def check(self, mi: base.ModuleInfo) -> List[base.Finding]:
+        out: List[base.Finding] = []
+        scopes = [mi.tree] + [n for n in ast.walk(mi.tree)
+                              if isinstance(n, (ast.FunctionDef,
+                                                ast.AsyncFunctionDef))]
+        for scope in scopes:
+            body = scope.body if hasattr(scope, "body") else []
+            self._walk(mi, body, {}, loop_assigned=None, out=out)
+        return out
+
+    # -- helpers ---------------------------------------------------------
+    def _key_vars_assigned(self, mi, stmt) -> List[str]:
+        """Names bound to fresh keys by this statement."""
+        names: List[str] = []
+        if not isinstance(stmt, ast.Assign):
+            return names
+        value = stmt.value
+        is_key = isinstance(value, ast.Call) and \
+            mi.resolve(value.func) in KEY_MAKERS
+        if isinstance(value, ast.Subscript):    # split(...)[0]
+            inner = value.value
+            is_key = isinstance(inner, ast.Call) and \
+                mi.resolve(inner.func) in KEY_MAKERS
+        if not is_key:
+            return names
+        for t in stmt.targets:
+            if isinstance(t, ast.Name):
+                names.append(t.id)
+            elif isinstance(t, (ast.Tuple, ast.List)):
+                names.extend(e.id for e in t.elts
+                             if isinstance(e, ast.Name))
+        return names
+
+    def _consumptions(self, mi, node) -> List[tuple]:
+        """(key name, call node) for each sampler call consuming a key
+        variable inside ``node`` (nested defs excluded — own scope)."""
+        cons = []
+
+        def visit(sub):
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda, ast.ClassDef)):
+                return                      # separate scope
+            if isinstance(sub, ast.Call) and \
+                    _is_sampler(mi.resolve(sub.func)):
+                args = list(sub.args)
+                for kw in sub.keywords:
+                    if kw.arg == "key":
+                        args.insert(0, kw.value)
+                if args and isinstance(args[0], ast.Name):
+                    cons.append((args[0].id, sub))
+            for child in ast.iter_child_nodes(sub):
+                visit(child)
+
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+        return cons
+
+    def _terminates(self, stmts) -> bool:
+        return bool(stmts) and isinstance(
+            stmts[-1], (ast.Return, ast.Raise, ast.Break, ast.Continue))
+
+    def _consume(self, mi, node, consumed, loop_assigned, out) -> None:
+        for name, call in self._consumptions(mi, node):
+            if name in consumed and consumed[name] >= 1:
+                out.append(self.finding(
+                    mi, call,
+                    f"PRNG key {name!r} consumed again without "
+                    "split/fold_in — correlated draws"))
+            elif loop_assigned is not None and name not in loop_assigned:
+                out.append(self.finding(
+                    mi, call,
+                    f"PRNG key {name!r} consumed inside a loop without "
+                    "per-iteration re-derivation — identical draws "
+                    "every iteration"))
+            consumed[name] = consumed.get(name, 0) + 1
+
+    def _walk(self, mi, stmts, consumed: Dict[str, int],
+              loop_assigned, out: List[base.Finding]) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue                    # separate scope, visited on its own
+            if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+                header = stmt.iter if isinstance(
+                    stmt, (ast.For, ast.AsyncFor)) else stmt.test
+                self._consume(mi, ast.Expr(value=header), consumed,
+                              loop_assigned, out)
+                assigned = {t.id for s in ast.walk(stmt)
+                            for t in getattr(s, "targets", [])
+                            if isinstance(t, ast.Name)}
+                if isinstance(stmt, (ast.For, ast.AsyncFor)) and \
+                        isinstance(stmt.target, ast.Name):
+                    assigned.add(stmt.target.id)
+                self._walk(mi, stmt.body, consumed, assigned, out)
+                self._walk(mi, stmt.orelse, consumed, loop_assigned, out)
+                continue
+            if isinstance(stmt, ast.If):
+                self._consume(mi, ast.Expr(value=stmt.test), consumed,
+                              loop_assigned, out)
+                a, b = dict(consumed), dict(consumed)
+                self._walk(mi, stmt.body, a, loop_assigned, out)
+                self._walk(mi, stmt.orelse, b, loop_assigned, out)
+                # a branch that returns/raises never rejoins: its
+                # consumptions must not poison the fall-through path
+                merge = []
+                if not self._terminates(stmt.body):
+                    merge.append(a)
+                if not self._terminates(stmt.orelse):
+                    merge.append(b)
+                if merge:
+                    for k in {k for m in merge for k in m}:
+                        consumed[k] = max(m.get(k, 0) for m in merge)
+                continue
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    self._consume(mi, ast.Expr(value=item.context_expr),
+                                  consumed, loop_assigned, out)
+                self._walk(mi, stmt.body, consumed, loop_assigned, out)
+                continue
+            if isinstance(stmt, ast.Try):
+                self._walk(mi, stmt.body, consumed, loop_assigned, out)
+                for h in stmt.handlers:
+                    self._walk(mi, h.body, consumed, loop_assigned, out)
+                self._walk(mi, stmt.finalbody, consumed, loop_assigned, out)
+                continue
+            self._consume(mi, stmt, consumed, loop_assigned, out)
+            for name in self._key_vars_assigned(mi, stmt):
+                consumed[name] = 0
+                if loop_assigned is not None:
+                    loop_assigned.add(name)

@@ -1,0 +1,103 @@
+"""R4 — retrace hazards: per-call jit wrapping and unhashable statics.
+
+Three shapes of the same bug (every call compiles a fresh program):
+
+* ``jax.jit(f)(x)`` — the jitted callable is created and discarded per
+  call, so its compile cache dies with it;
+* ``jax.jit(...)`` inside a ``for``/``while`` body — a new callable (and
+  cache) per iteration;
+* a jit with ``static_argnums``/``static_argnames`` called with an
+  unhashable literal (list/dict/set) in a static position — TypeError at
+  best, retrace-per-value at worst when the caller "fixes" it by tupling
+  a fresh object each call.
+
+Factory methods that memoize the jitted callable (the engines'
+``_get_cached_program`` / ``_get_bucket_fn``) are the sanctioned pattern
+and do not trip this rule.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.rules import base
+
+JIT_WRAPPERS = {"jax.jit", "jax.pmap"}
+MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+                    ast.SetComp, ast.GeneratorExp)
+
+
+class RetraceRule(base.Rule):
+    id = "R4"
+    name = "retrace"
+
+    def check(self, mi: base.ModuleInfo) -> List[base.Finding]:
+        out: List[base.Finding] = []
+        static_of: Dict[str, Set[int]] = {}
+        for node in ast.walk(mi.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            path = mi.resolve(node.func)
+            if path in JIT_WRAPPERS:
+                parent = getattr(node, "_repro_parent", None)
+                if isinstance(parent, ast.Call) and parent.func is node:
+                    out.append(self.finding(
+                        mi, node,
+                        f"{path}(f)(...) creates and discards a fresh "
+                        "compiled callable per call — hoist the jit out"))
+                loop = self._enclosing_loop(node)
+                if loop is not None:
+                    out.append(self.finding(
+                        mi, node,
+                        f"{path}(...) inside a loop — a new callable "
+                        "(and compile cache) per iteration; build once "
+                        "outside or memoize by signature"))
+                self._record_static(mi, node, static_of)
+        # unhashable literals at static positions of jit-bound names
+        for node in ast.walk(mi.tree):
+            if not isinstance(node, ast.Call) or \
+                    not isinstance(node.func, ast.Name):
+                continue
+            statics = static_of.get(node.func.id)
+            if not statics:
+                continue
+            for i, arg in enumerate(node.args):
+                if i in statics and isinstance(arg, MUTABLE_LITERALS):
+                    out.append(self.finding(
+                        mi, arg,
+                        f"unhashable literal passed in static position "
+                        f"{i} of jitted {node.func.id!r} — forces "
+                        "TypeError/retrace; pass a hashable (tuple)"))
+        return out
+
+    def _enclosing_loop(self, node):
+        for p in base.parents(node):
+            if isinstance(p, (ast.For, ast.AsyncFor, ast.While)):
+                return p
+            if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+                return None
+        return None
+
+    def _record_static(self, mi, call: ast.Call,
+                       static_of: Dict[str, Set[int]]) -> None:
+        statics: Set[int] = set()
+        for kw in call.keywords:
+            if kw.arg == "static_argnums":
+                statics |= set(self._int_elts(kw.value))
+        if not statics:
+            return
+        parent = getattr(call, "_repro_parent", None)
+        if isinstance(parent, ast.Assign):
+            for t in parent.targets:
+                if isinstance(t, ast.Name):
+                    static_of[t.id] = statics
+
+    def _int_elts(self, node) -> Tuple[int, ...]:
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return (node.value,)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return tuple(e.value for e in node.elts
+                         if isinstance(e, ast.Constant)
+                         and isinstance(e.value, int))
+        return ()

@@ -1,0 +1,63 @@
+"""R1 — Python-level branching on traced values inside jitted functions.
+
+``if`` / ``while`` / conditional expressions whose test involves a traced
+value (a parameter of the traced function, or anything derived from a
+``jax.*`` call) force a concretization error at best and a silent
+trace-time specialization at worst.  Inside a traced function, control
+flow on array values belongs in ``jnp.where`` / ``lax.cond`` /
+``lax.while_loop``.
+
+Static-metadata tests (``x.shape``, ``x.ndim``, ``len(x)``,
+``isinstance``) are fine and excluded; branching on closure config
+(Python bools/ints captured from outside) is fine too — only parameters
+of the traced function and locally derived device values count.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.rules import base
+
+
+class TracedBranchRule(base.Rule):
+    id = "R1"
+    name = "traced-branch"
+
+    def check(self, mi: base.ModuleInfo) -> List[base.Finding]:
+        out: List[base.Finding] = []
+        traced = mi.traced_functions()
+        for fn in traced:
+            if isinstance(fn, ast.Lambda):
+                continue                 # lambdas cannot contain if/while
+            taint: Set[str] = {a.arg for a in fn.args.args
+                               + fn.args.posonlyargs + fn.args.kwonlyargs}
+            # params with a default are the closure-capture idiom
+            # (``def body(c, x, kind=kind)``): jax transforms pass traced
+            # operands positionally, so default-valued params are static
+            pos = fn.args.posonlyargs + fn.args.args
+            if fn.args.defaults:
+                taint -= {a.arg for a in pos[-len(fn.args.defaults):]}
+            taint -= {a.arg for a, d in zip(fn.args.kwonlyargs,
+                                            fn.args.kw_defaults)
+                      if d is not None}
+            taint |= base.device_tainted_names(mi, fn, extra_sources=())
+            for node in ast.walk(fn):
+                # nested defs are traced too but get their own visit
+                if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                    owner = next(
+                        (p for p in base.parents(node)
+                         if isinstance(p, (ast.FunctionDef,
+                                           ast.AsyncFunctionDef))), None)
+                    if owner is not fn:
+                        continue
+                    if base.expr_uses_device_value(mi, node.test, taint):
+                        kind = {"If": "if", "While": "while",
+                                "IfExp": "conditional expression"}[
+                                    type(node).__name__]
+                        out.append(self.finding(
+                            mi, node,
+                            f"Python {kind} on a traced value inside "
+                            f"jitted function {getattr(fn, 'name', '?')!r}"
+                            " — use jnp.where / lax.cond instead"))
+        return out

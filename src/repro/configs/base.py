@@ -13,7 +13,7 @@ and serialize trivially into checkpoints.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 def _round_up(x: int, m: int) -> int:

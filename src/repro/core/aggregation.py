@@ -21,6 +21,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import contracts as CT
+
+
+def _finite_out(out, *args, **kwargs):
+    """Aggregation contract: the merged globals carry no NaN/Inf — one
+    poisoned client update must trip here, at the seam, not rounds later
+    in a diverged trajectory.  No-op on traced values and with contracts
+    off."""
+    CT.assert_finite(out, tag="aggregation")
+
 
 def alpha_weights(ratios: Sequence[float]) -> jnp.ndarray:
     r = jnp.asarray(ratios, jnp.float32)
@@ -119,6 +129,7 @@ def aggregate_masked_mean_stacked(global_params, stacked_params,
     return jax.tree.map(combine, global_params, stacked_masks, stacked_params)
 
 
+@CT.contract(post=_finite_out)
 def aggregate_stacked(cfg_mode: str, global_params, stacked_params,
                       ratios=None, stacked_masks=None):
     if cfg_mode == "alpha_weighted":
@@ -142,6 +153,7 @@ def staleness_weights(staleness: jax.Array, a=0.5) -> jax.Array:
     return (staleness.astype(jnp.float32) + 1.0) ** (-a)
 
 
+@CT.contract(post=_finite_out)
 def mix(global_params, client_params, weight: float):
     """Async mixing: theta <- (1-w) theta + w theta_client (AFO/Asyn paths)."""
     return jax.tree.map(
@@ -300,6 +312,7 @@ class SnapshotRing:
         return jax.tree.map(lambda x: x[s], self.params)
 
 
+@CT.contract(post=_finite_out)
 def aggregate(cfg_mode: str, global_params, client_params,
               ratios=None, client_masks=None):
     if cfg_mode == "alpha_weighted":

@@ -18,6 +18,30 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import contracts as CT
+
+
+def _select_masks_pre(scores, forced, volume, p_s, key, block=0):
+    """Eq. 2 precondition: (L, n)-shaped score/forced rows, a scalar
+    volume, and p_s in [0, 1].  Shape-level only, so it runs under
+    jit/vmap tracing too (shapes are always concrete)."""
+    for k, u in scores.items():
+        if getattr(u, "ndim", None) != 2:
+            raise CT.ContractError(
+                f"select_masks: scores[{k!r}] must be (L, n), got "
+                f"shape {getattr(u, 'shape', None)}")
+        f = forced.get(k)
+        if f is not None and f.shape != u.shape:
+            raise CT.ContractError(
+                f"select_masks: forced[{k!r}] shape {f.shape} != "
+                f"scores shape {u.shape}")
+    if getattr(volume, "shape", ()) not in ((), (1,)):
+        raise CT.ContractError(
+            f"select_masks: volume must be scalar, got shape "
+            f"{volume.shape}")
+    if not 0.0 <= float(p_s) <= 1.0:
+        raise CT.ContractError(f"select_masks: p_s={p_s} outside [0, 1]")
+
 
 def _row_select(u: jax.Array, forced: jax.Array, k_total: jax.Array,
                 k_top: jax.Array, key: jax.Array) -> jax.Array:
@@ -63,6 +87,7 @@ def _expand_blocks(bm: jax.Array, block: int, n: int) -> jax.Array:
     return jnp.repeat(bm, block, axis=-1)[..., :n]
 
 
+@CT.contract(pre=_select_masks_pre)
 def select_masks(scores: Dict[str, jax.Array],
                  forced: Dict[str, jax.Array],
                  volume: jax.Array,

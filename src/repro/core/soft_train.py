@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import contracts as CT
 from repro.configs.base import HeliosConfig
 from repro.core import contribution as C
 from repro.core import selection as S
@@ -47,6 +48,24 @@ def init_state(schema: Dict[str, tuple], volume: float = 1.0,
     }
 
 
+def _begin_cycle_post(out: dict, state: dict, hcfg: HeliosConfig) -> None:
+    """begin_cycle contract: Eq. 2 masks are 0/1, block-constant at
+    ``mask_block`` granularity with ~P·n units kept, and the PRNG key
+    advanced (no reuse across cycles).  Value checks bail under tracing
+    (the batched/sharded engines run begin_cycle vmapped in jit)."""
+    if not hcfg.enabled:
+        return
+    CT.check_mask_invariants(out["masks"], out["volume"],
+                             hcfg.mask_block, tag="begin_cycle")
+    if not CT.has_tracers(out["rng"], state["rng"]):
+        with CT.expected_transfer("contracts.begin_cycle.rng"):
+            if bool(jnp.all(out["rng"] == state["rng"])):
+                raise CT.ContractError(
+                    "begin_cycle: rng key not advanced — the next cycle "
+                    "would redraw identical masks")
+
+
+@CT.contract(post=_begin_cycle_post)
 def begin_cycle(state: dict, hcfg: HeliosConfig) -> dict:
     """Select this cycle's masks from scores + rotation state.
 
@@ -183,4 +202,8 @@ def scatter_states_host(pop: dict, idx, sub: dict) -> None:
     def write(x, s):
         x[idx] = np.asarray(s)
 
-    jax.tree.map(write, pop, sub)
+    # an INTENDED device->host pull: the population state is host-resident
+    # by design (shape-stable jit inputs), so the transfer guard must not
+    # flag the per-round write-back
+    with CT.expected_transfer("soft_train.scatter_states_host"):
+        jax.tree.map(write, pop, sub)

@@ -13,7 +13,7 @@ a cohort (or popped off the async event heap).
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List
 
 import numpy as np
 

@@ -18,7 +18,6 @@ from typing import List
 from repro.core.identification import DeviceProfile
 # canonical home moved to the discrete-event core; re-exported for callers
 # that still import the clock from here
-from repro.federated.events import SimClock  # noqa: F401
 
 #: paper Table I: 4 straggler settings running AlexNet on CIFAR-10.
 #: (compute workload GFLOPS, memory usage MB, time cost min)

@@ -54,6 +54,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis import contracts as CT
 from repro.configs.base import HeliosConfig, ModelConfig
 from repro.core import aggregation as AG
 from repro.core import masking as MK
@@ -246,8 +247,10 @@ class FLRun:
             client.helios_state = ST.end_cycle(
                 client.helios_state,
                 client.helios_state["scores"], hcfg)
-        ratio = float(MK.selected_fraction(masks))
-        return new_params, masks, ratio, float(loss)
+        # device scalars on purpose: the hot loops never sync on these —
+        # they are converted behind the eval gate (_record_round / history)
+        ratio = MK.selected_fraction(masks)
+        return new_params, masks, ratio, loss
 
     def _aggregate(self, results):
         """results: list of (params, masks, ratio)."""
@@ -280,8 +283,10 @@ class FLRun:
             chunk = self.adapter.eval_slice(self.test_data, lo,
                                             min(lo + self.eval_batch, n))
             s, w = self._eval_chunk(self.global_params, chunk)
-            total += float(s)
-            weight += float(w)
+            # evaluate() IS the deliberate sync point (callers gate on
+            # eval_every); the per-chunk sync is intended
+            total += float(s)     # repro: noqa[R3]
+            weight += float(w)    # repro: noqa[R3]
         return total / max(weight, 1e-9)
 
     # ------------------------------------------------------------------
@@ -326,14 +331,18 @@ class FLRun:
                 for c in (self.clients if clients is None else clients)]
 
     def _record_round(self, r: int, rounds: int, eval_every: int,
-                      clock: float, loss: float, ratios: List[float]):
+                      clock: float, losses, ratios):
         """History bookkeeping shared by all sync engines; eval_every=0
-        disables evaluation/history entirely (pure-throughput benchmarks)."""
+        disables evaluation/history entirely (pure-throughput benchmarks).
+        Takes the raw per-client losses/ratios (device scalars or arrays)
+        and converts to host floats HERE, behind the eval gate — the
+        run_sync hot loop itself never forces a device->host sync."""
         if eval_every > 0 and (r % eval_every == 0 or r == rounds - 1):
             self.history.append({
                 "scheme": self.scheme, "cycle": r + 1, "time": clock,
-                self.adapter.metric_name: self.evaluate(), "loss": loss,
-                "ratios": ratios,
+                self.adapter.metric_name: self.evaluate(),
+                "loss": float(np.mean(np.asarray(losses))),
+                "ratios": [float(x) for x in np.asarray(ratios)],
                 "volumes": [c.volume for c in self.clients]})
 
     def run_sync(self, rounds: int, eval_every: int = 1) -> List[dict]:
@@ -355,14 +364,23 @@ class FLRun:
             cclients = [self.clients[i] for i in cohort]
             pace = _collab_pace(cclients)
             times = self._round_times(cclients)
-            losses, ratios = self._train_cohort(cohort, cclients)
+            # contract: the round's device work never syncs to host —
+            # losses/ratios stay device values until _record_round's gate
+            with CT.no_host_transfers("run_sync[" + self.scheme + "]"):
+                losses, ratios = self._train_cohort(cohort, cclients)
+            CT.assert_finite(self.global_params, tag="run_sync.global_params")
             self._adapt_volumes(cohort, cclients, times, pace)
             clock += max(times)
             self.round += 1
-            self._record_round(r, rounds, eval_every, clock,
-                               float(np.mean(np.asarray(losses))),
-                               [float(x) for x in np.asarray(ratios)])
+            self._record_round(r, rounds, eval_every, clock, losses, ratios)
         self._finish_sync()
+        if CT.enabled():
+            # one compiled program per seam per shape signature, and every
+            # surviving straggler mask still satisfies the Eq. 2 structure
+            CT.check_compile_budget(self, tag="run_sync.compile")
+            for masks in self._contract_state_masks():
+                CT.check_mask_invariants(
+                    masks, block=self.hcfg.mask_block, tag="run_sync.masks")
         return self.history
 
     # -- engine hooks ---------------------------------------------------
@@ -401,6 +419,15 @@ class FLRun:
 
     def _finish_sync(self) -> None:
         pass
+
+    def _contract_state_masks(self):
+        """Mask trees the post-run contract sweep validates (structure
+        only: 0/1 and block-constant; the count check needs the
+        selection-time volume and runs in soft_train.begin_cycle's
+        contract instead).  Engines that keep state elsewhere override."""
+        return [c.helios_state["masks"] for c in self.clients
+                if c.is_straggler and isinstance(c.helios_state, dict)
+                and "masks" in c.helios_state]
 
     # ------------------------------------------------------------------
     # async (event-driven) reference engine
@@ -448,12 +475,14 @@ class FLRun:
             # anchors are never evicted (below), so this lookup cannot fall
             # back to the current global params and mislabel staleness
             base = snapshots[c.staleness_anchor]
-            new_params, _, _, loss = self._client_cycle(c, base)
             stale = agg_counter - c.staleness_anchor
-            w = mix_weight
-            if self.scheme == "afo":
-                w = mix_weight * AG.staleness_weight(stale, staleness_a)
-            self.global_params = AG.mix(self.global_params, new_params, w)
+            CT.check_staleness([stale], a=staleness_a, tag="run_async[seq]")
+            with CT.no_host_transfers("run_async[seq]"):
+                new_params, _, _, loss = self._client_cycle(c, base)
+                w = mix_weight
+                if self.scheme == "afo":
+                    w = mix_weight * AG.staleness_weight(stale, staleness_a)
+                self.global_params = AG.mix(self.global_params, new_params, w)
             agg_counter += 1
             snapshots[agg_counter] = self.global_params
             c.staleness_anchor = agg_counter
@@ -482,8 +511,14 @@ class FLRun:
                         "scheme": self.scheme, "cycle": done_fast,
                         "time": clock.now,
                         self.adapter.metric_name: self.evaluate(),
-                        "loss": loss, "staleness": stale})
+                        # behind the eval gate: evaluate() just synced
+                        "loss": float(loss),  # repro: noqa[R3]
+                        "staleness": stale})
         self.agg_counter = agg_counter
+        CT.check_snapshot_bound(self.snapshot_peak,
+                                self.snapshot_anchor_misses,
+                                snapshot_cap, len(self.clients),
+                                tag="run_async[seq].snapshots")
         return self.history
 
     # ------------------------------------------------------------------
@@ -680,17 +715,20 @@ class AsyncFLRun(FLRun):
                     ring.alloc.retain(new_agg)
                     c.staleness_anchor = new_agg
                 self.agg_counter = agg0 + b
+                CT.check_staleness(stales, a=staleness_a,
+                                   tag="run_async[bucket]")
                 pad = bpad - b
                 bucket_fn = self._get_bucket_fn(bpad)
-                self.global_params, ring.params, losses = bucket_fn(
-                    self.global_params, ring.params,
-                    jnp.asarray(base_slots + [0] * pad, jnp.int32),
-                    jnp.asarray(write_slots + [ring.scratch] * pad,
-                                jnp.int32),
-                    batches,
-                    jnp.asarray(stales + [0] * pad, jnp.float32),
-                    jnp.asarray([1.0] * b + [0.0] * pad, jnp.float32),
-                    float(mix_weight), float(staleness_a))
+                with CT.no_host_transfers("run_async[bucket]"):
+                    self.global_params, ring.params, losses = bucket_fn(
+                        self.global_params, ring.params,
+                        jnp.asarray(base_slots + [0] * pad, jnp.int32),
+                        jnp.asarray(write_slots + [ring.scratch] * pad,
+                                    jnp.int32),
+                        batches,
+                        jnp.asarray(stales + [0] * pad, jnp.float32),
+                        jnp.asarray([1.0] * b + [0.0] * pad, jnp.float32),
+                        float(mix_weight), float(staleness_a))
                 self.events_processed += b
                 self.bucket_sizes.append(b)
                 done_fast += sum(1 for ev in exec_evs
@@ -709,12 +747,17 @@ class AsyncFLRun(FLRun):
                     "scheme": self.scheme, "cycle": done_fast,
                     "time": clock.now,
                     self.adapter.metric_name: self.evaluate(),
-                    "loss": float(np.mean(np.asarray(losses)[:b])),
+                    # behind the eval gate: evaluate() just synced
+                    "loss": float(np.mean(np.asarray(losses)[:b])),  # repro: noqa[R3]
                     "staleness": float(np.mean(stales)),
                     "bucket": b})
                 next_rec = (done_fast // eval_every + 1) * eval_every
         self.snapshot_peak = ring.alloc.peak_live
         self.snapshot_anchor_misses = ring.alloc.anchor_misses
+        if CT.enabled():
+            CT.check_ring(ring, len(self.clients),
+                          tag="run_async[bucket].ring")
+            CT.check_compile_budget(self, tag="run_async[bucket].compile")
         return self.history
 
 
@@ -853,7 +896,8 @@ class BatchedFLRun(AsyncFLRun):
         self.global_params, self._sstate, ratios, losses = \
             self._round_fn(self.global_params, self._sstate,
                            s_batch, c_batch, self._unperm)
-        return np.asarray(losses), np.asarray(ratios)
+        # device arrays on purpose — _record_round converts behind the gate
+        return losses, ratios
 
     def _train_cohort_sampled(self, cohort: List[int],
                               cclients: List[Client]):
@@ -889,7 +933,8 @@ class BatchedFLRun(AsyncFLRun):
         if s_pos:
             for j, st in zip(s_pos, ST.unstack_states(sstate, len(s_pos))):
                 cclients[j].helios_state = st
-        return np.asarray(losses), np.asarray(ratios)
+        # device arrays on purpose — _record_round converts behind the gate
+        return losses, ratios
 
     def _write_volumes(self, cohort: List[int], cclients: List[Client],
                        upd: List[int]) -> None:
@@ -1111,7 +1156,8 @@ class ShardedFLRun(BatchedFLRun):
         ST.scatter_states_host(
             self._pop_state, cohort,
             jax.tree.map(lambda x: x[:k], new_cstate))
-        return np.asarray(losses)[:k], np.asarray(ratios)[:k]
+        # device slices on purpose — _record_round converts behind the gate
+        return losses[:k], ratios[:k]
 
     def _write_volumes(self, cohort: List[int], cclients: List[Client],
                        upd: List[int]) -> None:
@@ -1120,6 +1166,16 @@ class ShardedFLRun(BatchedFLRun):
 
     def _finish_sync(self) -> None:
         pass                # population rows ARE the authoritative state
+
+    def _contract_state_masks(self):
+        # straggler rows of the host-resident population state, checked
+        # stacked (check_mask_invariants accepts leading client axes)
+        s_idx = [i for i, c in enumerate(self.clients) if c.is_straggler]
+        pop = getattr(self, "_pop_state", None)
+        if not s_idx or not isinstance(pop, dict) or "masks" not in pop:
+            return []
+        idx = np.asarray(s_idx)
+        return [{k: v[idx] for k, v in pop["masks"].items()}]
 
 
 def setup_clients(profiles: Sequence[DeviceProfile],

@@ -28,6 +28,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import contracts as CT
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.masked_matmul import masked_matmul as _mm
 from repro.kernels.masked_matmul import masked_matmul_dk as _mm_dk
@@ -195,6 +196,20 @@ def _collapse(x):
     return x.reshape(-1, x.shape[-1]), lambda y: y.reshape(lead + y.shape[-1:])
 
 
+def _masked_dense_pre(x, w, unit_mask, **kwargs):
+    """Kernel precondition (shape-level, jit-safe): x (..., K) contracts
+    with w (K, N); unit_mask masks w's OUTPUT axis (N,)."""
+    if w.ndim != 2 or x.shape[-1] != w.shape[0]:
+        raise CT.ContractError(
+            f"masked_dense: x (..., K={x.shape[-1]}) incompatible with "
+            f"w {w.shape} (want (K, N))")
+    if unit_mask.shape != (w.shape[1],):
+        raise CT.ContractError(
+            f"masked_dense: unit_mask {unit_mask.shape} must be "
+            f"(N,) = ({w.shape[1]},) — it masks w's output axis")
+
+
+@CT.contract(pre=_masked_dense_pre)
 def masked_dense(x, w, unit_mask, *, impl: str = REFERENCE,
                  block_n: int = 128):
     """Soft-training dense layer: ``y = x @ (w · unit_mask[None, :])``.
@@ -210,6 +225,20 @@ def masked_dense(x, w, unit_mask, *, impl: str = REFERENCE,
     return restore(_masked_dense_pallas(block_n)(x2, w, unit_mask))
 
 
+def _masked_contract_pre(h, w, unit_mask, **kwargs):
+    """Kernel precondition: h (..., N) contracts with w (N, K) over the
+    MASKED axis; unit_mask is (N,)."""
+    if w.ndim != 2 or h.shape[-1] != w.shape[0]:
+        raise CT.ContractError(
+            f"masked_contract: h (..., N={h.shape[-1]}) incompatible "
+            f"with w {w.shape} (want (N, K))")
+    if unit_mask.shape != (w.shape[0],):
+        raise CT.ContractError(
+            f"masked_contract: unit_mask {unit_mask.shape} must be "
+            f"(N,) = ({w.shape[0]},) — it masks the contraction axis")
+
+
+@CT.contract(pre=_masked_contract_pre)
 def masked_contract(h, w, unit_mask, *, impl: str = REFERENCE,
                     block_n: int = 128):
     """Second half of a masked MLP: ``y = (h · unit_mask) @ w`` where the
@@ -296,6 +325,26 @@ def _flash_diff(causal: bool, block_q: int, block_k: int):
     return fn
 
 
+def _flash_attention_pre(q, k, v, *, causal: bool = True, **kwargs):
+    """Attention precondition: (B, H, S, hd) operands, matching k/v
+    sequence lengths, and Sq == Sk under the causal mask (key padding
+    would otherwise leak attention onto padded keys)."""
+    if not (q.ndim == k.ndim == v.ndim == 4):
+        raise CT.ContractError(
+            f"flash_attention: q/k/v must be (B, H, S, hd), got "
+            f"{q.shape}/{k.shape}/{v.shape}")
+    if k.shape != v.shape or q.shape[:2] != k.shape[:2] or \
+            q.shape[3] != k.shape[3]:
+        raise CT.ContractError(
+            f"flash_attention: incompatible q {q.shape} vs k {k.shape} "
+            f"vs v {v.shape}")
+    if causal and q.shape[2] != k.shape[2]:
+        raise CT.ContractError(
+            f"flash_attention: causal needs Sq == Sk "
+            f"(got {q.shape[2]} vs {k.shape[2]})")
+
+
+@CT.contract(pre=_flash_attention_pre)
 def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
                     block_k: int = 128):
     """q,k,v: (B, H, S, hd) -> (B, H, S, hd).  Differentiable (recompute

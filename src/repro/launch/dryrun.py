@@ -17,7 +17,6 @@ os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
 #   python -m repro.launch.dryrun --all [--multi-pod] [--fl-round]
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback
@@ -29,7 +28,7 @@ from repro.configs import (ARCHS, SHAPES, TrainConfig, HeliosConfig,
                            applicable, get_model_config, get_shape)
 from repro.launch import steps as S
 from repro.launch.mesh import make_production_mesh
-from repro.models import build, decode_cache_specs, default_runtime
+from repro.models import decode_cache_specs, default_runtime
 from repro.parallel import hlo_analysis as HA
 from repro.parallel import sharding as SH
 

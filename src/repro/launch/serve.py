@@ -1,5 +1,8 @@
 """Serving driver: batched prefill + decode loop with KV/SSM caches.
 
+# repro: noqa[R6] — standalone CLI entry point exercised only by tests;
+kept as the serving surface (tracked in ROADMAP.md).
+
   PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m --reduced \
       --batch 8 --prompt-len 64 --gen 32
 """

@@ -16,7 +16,6 @@ all-reduce over the pod axis per round (local-SGD round fusion).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,8 +25,8 @@ from repro.configs.base import (HeliosConfig, ModelConfig, ShapeConfig,
 from repro.core import contribution as CONTRIB
 from repro.core import masking as MK
 from repro.core import soft_train as ST
-from repro.models import (abstract_params, build, decode_cache_specs,
-                          default_runtime, input_specs, logical_axes)
+from repro.models import (abstract_params, build, input_specs,
+                          logical_axes)
 from repro.optim import (apply_updates, clip_by_global_norm, make_optimizer,
                          warmup_cosine_schedule)
 from repro.parallel import sharding as SH

@@ -8,7 +8,7 @@ receive zero gradients (soft-training semantics).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.module import P
-from repro.models.layers import apply_norm, apply_rope, attend, dense_attention, norm_spec
+from repro.models.layers import apply_norm, apply_rope, attend, norm_spec
 
 
 def mla_spec(cfg):

@@ -14,8 +14,7 @@ hidden units instead, shrinking the compiled matmuls (DESIGN.md §2).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +24,7 @@ from jax.ad_checkpoint import checkpoint_name
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models import mla, moe
-from repro.models.module import P, stack
+from repro.models.module import stack
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,8 @@
 """Top-k gradient sparsification with error feedback (refs [19][20]).
 
+# repro: noqa[R6] — tests-only today: wired into the FL uplink when the
+communication-volume experiments land (tracked in ROADMAP.md).
+
 Used on the FL uplink (client -> server) as the distributed-optimization
 companion of soft-training: soft-training shrinks the COMPUTE volume, top-k
 compression shrinks the COMMUNICATION volume, and Prop. 2's variance bound is

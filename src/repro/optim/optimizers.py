@@ -11,7 +11,6 @@ Optimizer states inherit parameter shardings under pjit (same tree shape).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, NamedTuple, Optional
 
 import jax

@@ -10,7 +10,7 @@ d_ff = 4864 = 16*304 tensor-shards (DESIGN.md §5).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import numpy as np

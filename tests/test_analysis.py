@@ -1,0 +1,603 @@
+"""repro.analysis: the JAX-hazard linter (R1-R6) + runtime contracts.
+
+Layer 1 (lint): every rule fires on a minimal violating fixture and is
+silenced by ``# repro: noqa[Rn]`` on the finding line; the repo's own
+``src/`` is clean (zero unsuppressed findings) while the known intentional
+orphans (optim/compression.py, launch/serve.py) stay VISIBLE as suppressed
+findings in the JSON report.
+
+Layer 2 (contracts): the transfer guard blocks implicit device->host syncs
+in engine hot loops (and a deliberately leaky engine subclass trips it),
+checkify tripwires catch NaN aggregations, the domain checkers accept
+valid Eq. 2 masks / staleness schedules / snapshot rings and reject
+corrupted ones, and a contracts-ON batched engine run over >=3 distinct
+sampled cohorts passes the one-program-per-signature compile budget.
+Everything is a no-op with contracts off (counters stay zero).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import contracts as CT
+from repro.analysis.lint import lint_paths, make_report, unsuppressed
+from repro.configs import CNNS, HeliosConfig, reduced
+from repro.core import aggregation as AG
+from repro.core import selection as SEL
+from repro.core import soft_train as ST
+from repro.data.federated import partition_noniid
+from repro.data.synthetic import class_gaussian_images
+from repro.federated import (BatchedFLRun, FLRun, make_fleet,
+                             setup_clients)
+from repro.kernels import ops
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYP = True
+except ImportError:                                    # container has no
+    HAVE_HYP = False                                   # hypothesis: skip
+
+needs_hyp = pytest.mark.skipif(not HAVE_HYP, reason="hypothesis not installed")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+# ---------------------------------------------------------------------------
+# layer 1: lint fixtures per rule
+# ---------------------------------------------------------------------------
+
+
+def _lint(tmp_path, source, name="fixture.py", rules=None):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(source))
+    return lint_paths([str(p)], rules=rules)
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings if not f.suppressed})
+
+
+R1_SRC = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        if x > 0:{noqa}
+            return x
+        return -x
+"""
+
+R2_SRC = """
+    import jax
+
+    def f(key):
+        a = jax.random.normal(key, (3,))
+        b = jax.random.uniform(key, (3,)){noqa}
+        return a + b
+"""
+
+R3_SRC = """
+    import jax.numpy as jnp
+
+    def f(xs):
+        total = 0.0
+        for x in xs:
+            y = jnp.sin(x)
+            total += float(y){noqa}
+        return total
+"""
+
+R4_SRC = """
+    import jax
+
+    def f(xs):
+        out = []
+        for x in xs:
+            out.append(jax.jit(lambda v: v * 2)(x)){noqa}
+        return out
+"""
+
+R5_SRC = """
+    import jax
+    import jax.numpy as jnp
+
+    step = jax.jit(lambda g: g + 1, donate_argnums=(0,))
+
+    def f():
+        g = jnp.zeros((4,))
+        out = step(g)
+        return out + g{noqa}
+"""
+
+R6_IMPORT_SRC = """
+    import os{noqa}
+
+    X = 1
+"""
+
+
+@pytest.mark.parametrize("rule,src,line_key", [
+    ("R1", R1_SRC, "if x > 0:"),
+    ("R2", R2_SRC, "uniform"),
+    ("R3", R3_SRC, "float(y)"),
+    ("R4", R4_SRC, "jax.jit(lambda"),
+    ("R5", R5_SRC, "out + g"),
+    ("R6", R6_IMPORT_SRC, "import os"),
+])
+def test_rule_fires_and_noqa_suppresses(tmp_path, rule, src, line_key):
+    """Each rule flags its violating fixture at the expected line, and the
+    same fixture with ``# repro: noqa[Rn]`` on that line reports zero
+    unsuppressed findings (the finding stays in the full list)."""
+    hot = _lint(tmp_path, src.format(noqa=""), name="hot.py")
+    hits = [f for f in hot if f.rule == rule]
+    assert hits, f"{rule} did not fire: {[str(f) for f in hot]}"
+    assert all(not f.suppressed for f in hits)
+    src_lines = textwrap.dedent(src.format(noqa="")).splitlines()
+    assert any(line_key in src_lines[f.line - 1] for f in hits), \
+        [str(f) for f in hits]
+
+    cold = _lint(tmp_path, src.format(noqa=f"  # repro: noqa[{rule}]"),
+                 name="cold.py")
+    assert not [f for f in cold if f.rule == rule and not f.suppressed], \
+        [str(f) for f in cold]
+    assert [f for f in cold if f.rule == rule and f.suppressed]
+
+
+def test_r1_ignores_static_and_closure_branches(tmp_path):
+    """Shape tests and default-valued (closure-capture) params are not
+    traced-value branches."""
+    findings = _lint(tmp_path, """
+        import jax
+
+        kind = "moe"
+
+        @jax.jit
+        def f(x, kind=kind):
+            if x.ndim == 2:
+                x = x[None]
+            if kind == "moe":
+                return x * 2
+            return x
+    """)
+    assert "R1" not in _rules(findings), [str(f) for f in findings]
+
+
+def test_r2_rederived_keys_pass(tmp_path):
+    """split/fold_in between consumptions is the sanctioned pattern."""
+    findings = _lint(tmp_path, """
+        import jax
+
+        def f(key, n):
+            out = []
+            for i in range(n):
+                sub = jax.random.fold_in(key, i)
+                out.append(jax.random.normal(sub, (3,)))
+            return out
+    """)
+    assert "R2" not in _rules(findings), [str(f) for f in findings]
+
+
+def test_r2_loop_reuse_fires(tmp_path):
+    """A key consumed inside a loop without re-derivation draws the same
+    sample every iteration."""
+    findings = _lint(tmp_path, """
+        import jax
+
+        def f(key, n):
+            out = []
+            for _ in range(n):
+                out.append(jax.random.normal(key, (3,)))
+            return out
+    """)
+    assert "R2" in _rules(findings)
+
+
+def test_r5_reassign_pattern_passes(tmp_path):
+    """The engines' donate-and-reassign idiom (``g = step(g)``) is safe."""
+    findings = _lint(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+
+        step = jax.jit(lambda g: g + 1, donate_argnums=(0,))
+
+        def f():
+            g = jnp.zeros((4,))
+            for _ in range(3):
+                g = step(g)
+            return g
+    """)
+    assert "R5" not in _rules(findings), [str(f) for f in findings]
+
+
+def _write_project(tmp_path, orphan_noqa=""):
+    """Minimal src/repro tree with one live and one orphan module."""
+    src = tmp_path / "src" / "repro"
+    src.mkdir(parents=True)
+    (src / "__init__.py").write_text("")
+    (src / "live.py").write_text("def go():\n    return 1\n")
+    (src / "orphan.py").write_text(
+        f'"""Nobody imports me.{orphan_noqa}"""\n\nY = 2\n')
+    ex = tmp_path / "examples"
+    ex.mkdir()
+    (ex / "run.py").write_text("from repro import live\n\nlive.go()\n")
+    return src
+
+
+def test_r6_orphan_module_fires(tmp_path):
+    """A src/repro module unreachable from examples/benchmarks/-m entry
+    points is an orphan; modules imported by an example are alive."""
+    src = _write_project(tmp_path)
+    findings = lint_paths([str(src)])
+    orphans = [f for f in findings if f.rule == "R6" and "orphan" in f.message]
+    assert [f for f in orphans if f.path.endswith("orphan.py")]
+    assert not [f for f in orphans if f.path.endswith("live.py")]
+
+
+def test_r6_orphan_noqa_in_docstring(tmp_path):
+    """Module-level findings accept the noqa anywhere in the first 10
+    lines — including inside the module docstring."""
+    src = _write_project(tmp_path, orphan_noqa="  # repro: noqa[R6]")
+    findings = lint_paths([str(src)])
+    orphans = [f for f in findings
+               if f.rule == "R6" and f.path.endswith("orphan.py")]
+    assert orphans and all(f.suppressed for f in orphans)
+
+
+def test_repo_src_is_lint_clean():
+    """The gate CI enforces: zero unsuppressed findings over src/, while
+    the known intentional orphans stay visible as SUPPRESSED findings in
+    the report (ISSUE: R6 must flag optim/compression.py and
+    launch/serve.py)."""
+    findings = lint_paths([SRC])
+    assert unsuppressed(findings) == [], \
+        [str(f) for f in unsuppressed(findings)]
+    report = make_report(findings, [SRC])
+    assert report["unsuppressed"] == 0
+    suppressed_paths = [f["path"] for f in report["findings"]
+                        if f["suppressed"] and f["rule"] == "R6"]
+    assert any(p.endswith(os.path.join("optim", "compression.py"))
+               for p in suppressed_paths), suppressed_paths
+    assert any(p.endswith(os.path.join("launch", "serve.py"))
+               for p in suppressed_paths), suppressed_paths
+
+
+def test_cli_exit_codes(tmp_path):
+    """``python -m repro.analysis lint`` exits 0 on clean input, 1 on an
+    unsuppressed finding, and ``report`` writes the JSON artifact."""
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(R3_SRC.format(noqa="")))
+    ok = tmp_path / "ok.py"
+    ok.write_text("X = 1\n")
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-m", "repro.analysis", "lint",
+                        str(ok)], env=env, capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+    out_json = tmp_path / "report.json"
+    r = subprocess.run([sys.executable, "-m", "repro.analysis", "lint",
+                        str(bad), "--out", str(out_json)],
+                       env=env, capture_output=True, text=True)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "R3" in r.stdout
+    assert out_json.exists()
+
+
+# ---------------------------------------------------------------------------
+# layer 2: transfer guard + tripwires (no engines)
+# ---------------------------------------------------------------------------
+
+
+def test_transfer_guard_blocks_and_whitelists():
+    x = jnp.ones(())
+    with CT.override(True):
+        with CT.no_host_transfers("test"):
+            with pytest.raises(CT.ContractError, match="float"):
+                float(x)
+            with pytest.raises(CT.ContractError, match="numpy.asarray"):
+                np.asarray(x)
+            with pytest.raises(CT.ContractError, match="__bool__"):
+                bool(x > 0)
+            with CT.expected_transfer("metrics"):
+                assert float(x) == 1.0          # whitelisted sync
+        assert float(x) == 1.0                  # outside the section
+    with CT.override(False):
+        with CT.no_host_transfers("off"):
+            assert float(x) == 1.0              # contracts off: no-op
+
+
+def test_transfer_guard_jit_safe():
+    """Compiling and running jitted programs inside a guarded section is
+    fine — only explicit host conversions trip the guard."""
+    @jax.jit
+    def f(a):
+        return jnp.sin(a).sum()
+
+    with CT.override(True):
+        with CT.no_host_transfers("jit"):
+            y = f(jnp.arange(8.0))              # fresh compile in-section
+            z = jax.tree.map(lambda t: t * 2, {"a": y})
+        assert np.isfinite(float(z["a"]))
+
+
+def test_assert_finite():
+    with CT.override(True):
+        CT.assert_finite({"w": jnp.ones((3,)), "b": jnp.zeros(())})
+        with pytest.raises(CT.ContractError, match="nan_tree"):
+            CT.assert_finite({"w": jnp.array([1.0, jnp.nan])},
+                             tag="nan_tree")
+        with pytest.raises(CT.ContractError):
+            CT.assert_finite([jnp.array([jnp.inf])], tag="inf_tree")
+        # integer leaves are exempt (finiteness is a float property)
+        CT.assert_finite({"n": jnp.arange(3)})
+    with CT.override(False):
+        CT.assert_finite({"w": jnp.array([jnp.nan])})   # off: no-op
+
+
+def test_aggregation_contract_catches_poisoned_mix():
+    """The @contract post on aggregation.mix trips on a NaN client."""
+    g = {"w": jnp.ones((4,))}
+    bad = {"w": jnp.array([1.0, jnp.nan, 1.0, 1.0])}
+    with CT.override(True):
+        CT.reset_counters()
+        AG.mix(g, {"w": jnp.zeros((4,))}, 0.5)      # healthy client: fine
+        assert CT.counters["finite_checks"] >= 1
+        with pytest.raises(CT.ContractError, match="aggregation"):
+            AG.mix(g, bad, 0.5)
+    with CT.override(False):
+        out = AG.mix(g, bad, 0.5)                   # off: flows through
+    assert not bool(jnp.all(jnp.isfinite(out["w"])))
+
+
+def test_selection_and_kernel_preconditions():
+    key = jax.random.PRNGKey(0)
+    with CT.override(True):
+        with pytest.raises(CT.ContractError, match="must be \\(L, n\\)"):
+            SEL.select_masks({"fc": jnp.ones((16,))}, {},
+                             jnp.asarray(0.5), 0.7, key)
+        with pytest.raises(CT.ContractError, match="p_s"):
+            SEL.select_masks({"fc": jnp.ones((2, 16))}, {},
+                             jnp.asarray(0.5), 1.7, key)
+        with pytest.raises(CT.ContractError, match="unit_mask"):
+            ops.masked_dense(jnp.ones((2, 8)), jnp.ones((8, 4)),
+                             jnp.ones((3,)))
+        with pytest.raises(CT.ContractError, match="flash_attention"):
+            ops.flash_attention(jnp.ones((1, 2, 8, 4)),
+                                jnp.ones((1, 2, 6, 4)),
+                                jnp.ones((1, 2, 6, 4)), causal=True)
+
+
+def test_begin_cycle_contract():
+    """begin_cycle's post: Eq. 2 masks obey the volume and the PRNG key
+    advances; a stuck key is rejected."""
+    schema = {"fc": (2, 16)}
+    hcfg = HeliosConfig()
+    state = ST.init_state(schema, volume=0.5, seed=3)
+    with CT.override(True):
+        CT.reset_counters()
+        out = ST.begin_cycle(state, hcfg)
+        assert CT.counters["mask_checks"] >= 1
+        assert not bool(jnp.all(out["rng"] == state["rng"]))
+        stuck = {**ST.init_state(schema, volume=1.0, seed=3)}
+        with pytest.raises(CT.ContractError, match="rng key not advanced"):
+            ST._begin_cycle_post(dict(stuck), stuck, hcfg)
+
+
+# ---------------------------------------------------------------------------
+# layer 2: domain checkers (valid + corrupted)
+# ---------------------------------------------------------------------------
+
+
+def _block_mask(L, n, block, P, seed=0):
+    """A valid Eq. 2-style mask: block-constant rows with
+    clip(round(P*nb), 1, nb) selected blocks each."""
+    nb = -(-n // block)
+    k = int(np.clip(np.round(np.float32(P) * nb), 1, nb))
+    rng = np.random.default_rng(seed)
+    rows = np.zeros((L, nb), np.float32)
+    for i in range(L):
+        rows[i, rng.choice(nb, size=k, replace=False)] = 1.0
+    return np.repeat(rows, block, axis=-1)[:, :n]
+
+
+def test_mask_checker_valid_and_corrupted():
+    P, block = 0.5, 4
+    m = _block_mask(3, 30, block, P)                 # ragged tail block
+    with CT.override(True):
+        CT.check_mask_invariants({"fc": m}, volume=P, block=block)
+        CT.check_mask_invariants({"fc": m}, volume=None, block=block)
+
+        broken = m.copy()
+        broken[0, 0] = 1.0 - broken[0, 0]            # break block-constancy
+        with pytest.raises(CT.ContractError, match="block-constant"):
+            CT.check_mask_invariants({"fc": broken}, block=block)
+
+        frac = m.copy()
+        frac[0, 0] = 0.5                             # non-binary value
+        with pytest.raises(CT.ContractError, match="outside"):
+            CT.check_mask_invariants({"fc": frac}, block=block)
+
+        with pytest.raises(CT.ContractError, match="selected counts"):
+            CT.check_mask_invariants({"fc": np.ones((3, 30), np.float32)},
+                                     volume=0.25, block=block)
+    with CT.override(False):
+        CT.check_mask_invariants({"fc": frac}, block=block)   # off: no-op
+
+
+def test_staleness_checker():
+    with CT.override(True):
+        CT.check_staleness([0, 1, 3, 7], a=0.5)
+        s = np.asarray([0.0, 2.0, 5.0])
+        CT.check_staleness(s, weights=(s + 1.0) ** -0.5, a=0.5)
+        with pytest.raises(CT.ContractError, match="negative staleness"):
+            CT.check_staleness([1.0, -2.0])
+        with pytest.raises(CT.ContractError, match="diverge"):
+            CT.check_staleness(s, weights=[1.0, 1.0, 1.0], a=0.5)
+
+
+def test_ring_and_snapshot_checkers():
+    def alloc(misses=0, live=2, slots=5, peak=3):
+        return types.SimpleNamespace(anchor_misses=misses, slots=slots,
+                                     live_slots=lambda: live,
+                                     peak_live=peak)
+    with CT.override(True):
+        CT.check_ring(alloc(), n_clients=8)
+        with pytest.raises(CT.ContractError, match="evicted"):
+            CT.check_ring(alloc(misses=1), n_clients=8)
+        with pytest.raises(CT.ContractError, match="exceed"):
+            CT.check_ring(alloc(live=5), n_clients=8)
+        with pytest.raises(CT.ContractError, match="peak"):
+            CT.check_ring(alloc(peak=9), n_clients=8)
+        CT.check_snapshot_bound(6, 0, cap=4, n_clients=4)
+        with pytest.raises(CT.ContractError, match="peak"):
+            CT.check_snapshot_bound(20, 0, cap=4, n_clients=4)
+
+
+def test_compile_budget_checker():
+    class FakeFn:
+        def __init__(self, n):
+            self.n = n
+
+        def _cache_size(self):
+            return self.n
+
+    run = types.SimpleNamespace(_local_train=FakeFn(1), _eval_chunk=FakeFn(2),
+                                _round_cache={("h", 4): FakeFn(1)},
+                                _bucket_cache={4: FakeFn(1)})
+    with CT.override(True):
+        CT.check_compile_budget(run)
+        rep = CT.compile_report(run)
+        assert rep["local_train"] == 1 and rep["bucket"] == {4: 1}
+        run._round_cache[("h", 2)] = FakeFn(3)       # one signature, 3 progs
+        with pytest.raises(CT.ContractError, match="compile budget"):
+            CT.check_compile_budget(run)
+
+
+def test_counters_zero_when_off():
+    """Zero-overhead claim: with contracts off no guard installs, no
+    counter ticks, no checker raises."""
+    CT.reset_counters()
+    with CT.override(False):
+        with CT.no_host_transfers("x"):
+            float(jnp.ones(()))
+        CT.assert_finite({"a": jnp.array([jnp.nan])})
+        CT.check_staleness([-1.0])
+        CT.check_mask_invariants({"fc": np.full((1, 8), 0.5)})
+        CT.check_compile_budget(types.SimpleNamespace())
+    assert all(v == 0 for v in CT.counters.values()), CT.counters
+
+
+# ---------------------------------------------------------------------------
+# layer 2: contracts on the real engines
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setting():
+    cfg = reduced(CNNS["lenet"])
+    imgs, labels = class_gaussian_images(800, cfg.image_size,
+                                         cfg.in_channels, cfg.num_classes,
+                                         seed=0)
+    ti, tl = class_gaussian_images(128, cfg.image_size, cfg.in_channels,
+                                   cfg.num_classes, seed=9)
+    parts = partition_noniid(labels, 4, shards_per_client=4)
+    return cfg, imgs, labels, ti, tl, parts
+
+
+def _make(setting, cls, scheme, **kw):
+    cfg, imgs, labels, ti, tl, parts = setting
+    clients = setup_clients(make_fleet(2, 2), parts, HeliosConfig())
+    return cls(cfg, HeliosConfig(), scheme, clients,
+               {"images": imgs, "labels": labels},
+               {"images": ti, "labels": tl},
+               local_steps=1, batch_size=8, lr=0.1, seed=0,
+               eval_batch=64, **kw)
+
+
+def test_engine_guard_catches_injected_sync(setting):
+    """A per-round ``float(loss)`` smuggled into the guarded train section
+    is exactly the hazard the transfer guard exists for."""
+    class LeakyFLRun(FLRun):
+        def _train_cohort(self, cohort, cclients):
+            losses, ratios = super()._train_cohort(cohort, cclients)
+            float(losses[0])                     # implicit d2h sync
+            return losses, ratios
+
+    leaky = _make(setting, LeakyFLRun, "helios")
+    with CT.override(True):
+        with pytest.raises(CT.ContractError, match="run_sync"):
+            leaky.run_sync(1, eval_every=0)
+
+
+def test_batched_engine_contracts_on_partial_participation(setting):
+    """ISSUE acceptance: contracts-enabled run over >=3 distinct sampled
+    cohorts — transfer guard + finite/mask checks + the <=1 program per
+    shape-signature compile budget all hold on the real engine."""
+    run = _make(setting, BatchedFLRun, "helios", participation=2)
+    with CT.override(True):
+        CT.reset_counters()
+        hist = run.run_sync(4)
+    assert len(hist) == 4
+    assert len({tuple(c) for c in run.cohort_log}) > 1   # draws varied
+    assert CT.counters["guarded_sections"] >= 4
+    assert CT.counters["finite_checks"] >= 4
+    assert CT.counters["compile_checks"] >= 1
+    assert CT.counters["blocked_transfers"] == 0
+    rep = CT.compile_report(run)
+    assert rep.get("round"), rep
+    with CT.override(True):
+        CT.check_compile_budget(run)
+    # same engine, contracts off: trajectory unchanged (guards are inert)
+    ref = _make(setting, BatchedFLRun, "helios", participation=2)
+    with CT.override(False):
+        href = ref.run_sync(4)
+    for a, b in zip(hist, href):
+        np.testing.assert_allclose(a["ratios"], b["ratios"], atol=0)
+        assert a["loss"] == b["loss"]
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties for the checkers
+# ---------------------------------------------------------------------------
+
+
+if HAVE_HYP:
+    @needs_hyp
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(1, 4), st.integers(4, 8), st.integers(1, 3),
+           st.floats(0.05, 1.0), st.integers(0, 10**6), st.data())
+    def test_prop_mask_checker(block, nb, L, P, seed, data):
+        """Any block-constant mask with clip(round(P*nb),1,nb) blocks per
+        row passes; flipping one unit inside a multi-unit block breaks
+        block-constancy and is rejected."""
+        n = data.draw(st.integers(nb * block - block + 1, nb * block))
+        m = _block_mask(L, n, block, P, seed=seed)
+        with CT.override(True):
+            CT.check_mask_invariants({"u": m}, volume=P, block=block,
+                                     slack=0)
+            if block > 1 and n >= 4 * block:
+                row = data.draw(st.integers(0, L - 1))
+                col = data.draw(st.integers(0, min(n, block) - 1))
+                bad = m.copy()
+                bad[row, col] = 1.0 - bad[row, col]
+                with pytest.raises(CT.ContractError):
+                    CT.check_mask_invariants({"u": bad}, block=block)
+
+    @needs_hyp
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.floats(0.0, 1e6), min_size=1, max_size=16),
+           st.floats(0.1, 2.0))
+    def test_prop_staleness_checker(stales, a):
+        """(s+1)^-a weights of any non-negative staleness list are in
+        (0, 1], monotone, and accepted; a negative staleness never is."""
+        with CT.override(True):
+            s = np.asarray(stales)
+            CT.check_staleness(s, weights=(s + 1.0) ** (-a), a=a)
+            with pytest.raises(CT.ContractError):
+                CT.check_staleness(np.concatenate([s, [-1.0]]), a=a)

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import contracts as CT
 from repro.configs import CNNS, HeliosConfig, reduced
 from repro.core import aggregation as AG
 from repro.data.federated import (partition_by_topic, partition_by_topic_lazy,
@@ -89,9 +90,12 @@ def test_async_equivalence_wall(setting, scheme):
     # ...and each client re-anchored to the same aggregation step
     for cs, cb in zip(seq.clients, buck.clients):
         assert cs.staleness_anchor == cb.staleness_anchor
-    # shape-stable compilation: one program per padded bucket size
-    progs = buck.bucket_programs()
-    assert progs and all(v == 1 for v in progs.values()), progs
+    # shape-stable compilation: one program per padded bucket size —
+    # asserted through the contracts API (the library-level budget)
+    rep = CT.compile_report(buck)
+    assert rep.get("bucket"), rep               # buckets actually compiled
+    with CT.override(True):
+        CT.check_compile_budget(buck)
     assert max(buck.bucket_sizes) > 1          # ties actually bucketed
     assert buck.snapshot_anchor_misses == 0
     assert buck.snapshot_peak <= 64 + len(buck.clients) + 2

@@ -5,8 +5,6 @@ The batched engine must be a pure data-layout change: for a fixed seed it
 replays the sequential engine's trajectory (same batches, same PRNG-driven
 mask selection, same volume adaptation) up to batched-reduction float error.
 """
-import dataclasses
-
 import jax
 import numpy as np
 import pytest

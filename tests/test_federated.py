@@ -1,15 +1,10 @@
 """Integration tests for the FL runtime: all five schemes run and converge;
 Helios beats Syn-FL on time-to-accuracy with stragglers; elastic scaling and
 checkpoint/restart of FL state work."""
-import dataclasses
-
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.checkpoint import restore, save
 from repro.configs import CNNS, HeliosConfig, reduced
-from repro.core import soft_train as ST
 from repro.data.federated import partition_noniid
 from repro.data.synthetic import class_gaussian_images
 from repro.federated import (FLRun, TABLE_I, cycle_time, make_fleet,

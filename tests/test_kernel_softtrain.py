@@ -326,10 +326,9 @@ def test_async_engine_accepts_pallas():
 # (c) hypothesis properties for block_align_mask
 # ---------------------------------------------------------------------------
 
-try:                                  # optional dev dependency — the guard
-    import hypothesis                 # mirrors test_theory_property.py, but
-    from hypothesis import given, settings          # noqa: F401
-    from hypothesis import strategies as st         # only part (c) skips
+try:                                  # optional dev dependency — only the
+    from hypothesis import given, settings          # part (c) properties
+    from hypothesis import strategies as st         # skip without it
     HAVE_HYPOTHESIS = True
 except ImportError:                   # pragma: no cover
     HAVE_HYPOTHESIS = False

@@ -7,8 +7,8 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, CNNS, SMOKE_SHAPE, reduced
-from repro.models import (build, decode_cache_specs, default_runtime,
-                          init_params, input_specs, make_full_masks)
+from repro.models import (build, default_runtime, init_params,
+                          input_specs, make_full_masks)
 
 
 def _concrete_batch(cfg, shape, key):

@@ -8,7 +8,6 @@ engine, and long-skipped units are forcibly rotated back in the next time
 their client is drawn.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,7 +1,5 @@
 """Sharding rule engine: divisibility fallbacks, cache specs, batch specs."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

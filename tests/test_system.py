@@ -2,7 +2,6 @@
 on the paper's own testbed (FULL LeNet / synthetic MNIST at calibrated
 difficulty, 2 capable + 2 Table-I stragglers) reproduces the qualitative
 claims: faster cycles, better accuracy at equal wall-clock."""
-import numpy as np
 import pytest
 
 from repro.configs import CNNS, HeliosConfig

@@ -25,7 +25,6 @@ def test_helios_volume_reduces_masked_fraction():
     from repro.configs import ARCHS, HeliosConfig, TrainConfig, reduced
     from repro.core import soft_train as ST
     from repro.launch import steps as S
-    from repro.models import default_runtime
 
     cfg = reduced(ARCHS["deepseek-7b"])
     hcfg = HeliosConfig(enabled=True, contribution="grad_ema")
