@@ -720,6 +720,114 @@ def bench_softtrain_flops():
              f"flop_fraction={flops / base:.3f}")
 
 
+def table_million_population(populations=(10_000, 100_000, 1_000_000),
+                             participation=64, rounds=3,
+                             modes=("none", "topk", "quant", "delta"),
+                             conv_rounds=12,
+                             host_budget_bytes=16 * 1024 ** 3,
+                             out_path="BENCH_million_population.json"):
+    """Million-client populations under a stated host-memory budget.
+
+    One subprocess per (N, mode) cell (benchmarks/million_worker.py):
+    sharded engine, K=64 sampled clients/round, uplink compression at the
+    aggregation boundary.  Reported against the STATED budget
+    (``host_budget_bytes``, default 16 GiB): peak host RSS over the whole
+    worker lifetime (population setup included), uplink bytes/round, and
+    rounds/sec.  Warmup round runs outside the timed window (same
+    discipline as the async bench).  Every cell asserts shape-stable
+    compilation and peak RSS under budget; the topk cells must clear the
+    >= 10x uplink reduction the compression layer exists for.
+
+    A small in-process convergence table (full participation, N=8,
+    ``conv_rounds`` rounds) records the final metric of every lossy mode
+    against ``none`` — the accuracy price of each wire format.
+    """
+    import json
+    import os as _os
+    import subprocess
+    import sys
+
+    repo = _os.path.dirname(_os.path.dirname(_os.path.abspath(__file__)))
+
+    def cell(n, mode):
+        env = dict(_os.environ, PYTHONPATH=_os.path.join(repo, "src"))
+        cmd = [sys.executable, "-m", "benchmarks.million_worker",
+               "--population", str(n), "--participation",
+               str(participation), "--rounds", str(rounds),
+               "--mode", mode]
+        r = subprocess.run(cmd, env=env, cwd=repo, capture_output=True,
+                           text=True, timeout=3600)
+        assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+        line = [ln for ln in r.stdout.splitlines()
+                if ln.startswith("MILLION ")][-1]
+        rec = json.loads(line[len("MILLION "):])
+        assert rec["compiled_programs"] == 1, rec   # no recompile per draw
+        assert rec["peak_host_bytes"] < host_budget_bytes, rec
+        rec["within_budget"] = True
+        emit(f"million_population/N={n}/{mode}",
+             rec["sec_per_round"] * 1e6,
+             f"rounds_per_sec={rec['rounds_per_sec']:.2f};"
+             f"peak_gb={rec['peak_host_bytes'] / 1024 ** 3:.2f};"
+             f"uplink_mb_per_round="
+             f"{rec['uplink_bytes_per_round'] / 1e6:.2f}")
+        return rec
+
+    cells = [cell(n, mode) for n in populations for mode in modes]
+    by = {(r["population"], r["mode"]): r for r in cells}
+    n_max = max(populations)
+    reduction = {m: by[(n_max, "none")]["uplink_bytes_per_round"]
+                 / by[(n_max, m)]["uplink_bytes_per_round"]
+                 for m in modes if m != "none"}
+    assert reduction.get("topk", 10.0) >= 10.0, reduction
+    emit(f"million_population/N={n_max}/uplink_reduction", 0.0,
+         ";".join(f"{m}={x:.1f}x" for m, x in sorted(reduction.items())))
+
+    # convergence delta: the accuracy price of each wire format
+    cfg = reduced(CNNS["lenet"])
+    imgs, labels = class_gaussian_images(
+        800, cfg.image_size, cfg.in_channels, cfg.num_classes, seed=0)
+    ti, tl = class_gaussian_images(128, cfg.image_size, cfg.in_channels,
+                                   cfg.num_classes, seed=9)
+    parts = partition_iid(len(labels), 8, seed=0)
+    conv = {}
+    for mode in modes:
+        hcfg = HeliosConfig()
+        clients = setup_clients(make_fleet(4, 4), parts, hcfg)
+        run = BatchedFLRun(cfg, hcfg, "helios", clients,
+                           {"images": imgs, "labels": labels},
+                           {"images": ti, "labels": tl},
+                           local_steps=1, batch_size=16, lr=0.1, seed=0,
+                           eval_batch=128, compression=mode)
+        run.run_sync(conv_rounds, eval_every=0)
+        conv[mode] = {"final_accuracy": run.evaluate(),
+                      "uplink_bytes": run.uplink_bytes()}
+    for mode in modes:
+        conv[mode]["delta_vs_none"] = (conv[mode]["final_accuracy"]
+                                       - conv["none"]["final_accuracy"])
+        emit(f"million_population/convergence/{mode}", 0.0,
+             f"acc={conv[mode]['final_accuracy']:.4f};"
+             f"delta={conv[mode]['delta_vs_none']:+.4f}")
+
+    with open(out_path, "w") as f:
+        json.dump({
+            "participation": participation, "rounds": rounds,
+            "scheme": "helios", "host_budget_bytes": host_budget_bytes,
+            "host_cpu_count": _os.cpu_count(),
+            "cells": cells,
+            "uplink_reduction_at_max_n": reduction,
+            "convergence": {"rounds": conv_rounds, "clients": 8,
+                            "table": conv},
+            "note": ("peak_host_bytes is worker-process ru_maxrss "
+                     "(population setup included); uplink bytes follow "
+                     "the wire formats in optim/compression.py "
+                     "(fp16 values for topk, int codes + per-leaf "
+                     "scales for quant/delta); error-feedback rows "
+                     "materialize host-side only for clients that have "
+                     "participated"),
+        }, f, indent=2)
+    print(f"wrote {out_path}")
+
+
 TABLES = {
     "fig5": table_convergence,
     "speedup": table_speedup,
@@ -729,6 +837,7 @@ TABLES = {
     "batched": table_batched_rounds,
     "federated_lm": table_federated_lm,
     "sharded_population": table_sharded_population,
+    "million_population": table_million_population,
     "async_events": table_async_events,
     "contracts": table_contracts_overhead,
     "kernel_softtrain": table_kernel_softtrain,
@@ -757,6 +866,9 @@ def main() -> None:
             fn(counts=(4,), rounds=2, ce_rounds=2)
         elif args.quick and name == "sharded_population":
             fn(devices=(1, 16), populations=(256,), rounds=4)
+        elif args.quick and name == "million_population":
+            fn(populations=(4096,), participation=32, rounds=2,
+               conv_rounds=4)
         elif args.quick and name == "async_events":
             fn(counts=(64,), capable_per_client=0.5)
         elif args.quick and name == "contracts":

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis import contracts as CT
+from repro.optim import compression as CP
 
 
 def _finite_out(out, *args, **kwargs):
@@ -208,6 +209,102 @@ def mix_bucket_ring(global_params, ring_params, slots, stacked_params,
     return g, ring
 
 
+def _lossy_delta(leaf, ref_leaf):
+    """Encode-space view of a snapshot leaf: vs the fixed reference (delta
+    mode) or the raw value (quant mode, ``ref_leaf`` None)."""
+    x = leaf.astype(jnp.float32)
+    return x if ref_leaf is None else x - ref_leaf.astype(jnp.float32)
+
+
+def lossy_roundtrip(params, ref, bits: int):
+    """What a lossy ring row decodes to for a STALE anchor.
+
+    quantize(theta [- ref]) -> dequantize [+ ref], per leaf — the exact
+    math :func:`mix_bucket_ring_lossy` applies at WRITE time, so the
+    sequential reference (which keeps full-precision dict snapshots and
+    decodes at READ time) lands on bit-identical base params.
+    """
+    r_leaves = [None] * len(jax.tree.leaves(params)) if ref is None \
+        else jax.tree.leaves(ref)
+    leaves, tdef = jax.tree.flatten(params)
+    out = []
+    for p, r in zip(leaves, r_leaves):
+        codes, scale = CP.quantize(_lossy_delta(p, r), bits)
+        dec = CP.dequantize(codes, scale)
+        if r is not None:
+            dec = dec + r.astype(jnp.float32)
+        out.append(dec.astype(p.dtype))
+    return jax.tree.unflatten(tdef, out)
+
+
+def ring_gather_lossy(ring_q, ring_scales, fresh_buf, ref, base_slots,
+                      fresh_idx, is_fresh):
+    """Per-event base params out of a lossy ring (traced).
+
+    Anchors inside the freshness window read full precision from the small
+    rotating ``fresh_buf`` (row = agg % window); stale anchors dequantize
+    their int ring row (+ ref for delta mode).  ``is_fresh`` is the (B,)
+    0/1 per-event staleness flag — the SAME ``stale < window`` rule the
+    sequential reference applies, so the engines agree event-for-event.
+    """
+    q_leaves = jax.tree.leaves(ring_q)
+    s_leaves = jax.tree.leaves(ring_scales)
+    f_leaves, tdef = jax.tree.flatten(fresh_buf)
+    r_leaves = [None] * len(q_leaves) if ref is None else jax.tree.leaves(ref)
+    out = []
+    for qL, scL, fL, rL in zip(q_leaves, s_leaves, f_leaves, r_leaves):
+        bshape = (-1,) + (1,) * (qL.ndim - 1)
+        deq = (jnp.take(qL, base_slots, axis=0).astype(jnp.float32)
+               * jnp.take(scL, base_slots).reshape(bshape))
+        if rL is not None:
+            deq = deq + rL.astype(jnp.float32)
+        fp = jnp.take(fL, fresh_idx, axis=0).astype(jnp.float32)
+        sel = is_fresh.reshape(bshape)
+        out.append(jnp.where(sel > 0, fp, deq).astype(fL.dtype))
+    return jax.tree.unflatten(tdef, out)
+
+
+def mix_bucket_ring_lossy(global_params, ring_q, ring_scales, fresh_buf,
+                          ref, write_slots, fresh_slots, stacked_params,
+                          weights, bits: int):
+    """:func:`mix_bucket_ring` for a lossy ring.
+
+    Each post-mix global is written TWICE: quantized (int codes + one f32
+    scale per leaf) into ring slot ``write_slots[i]``, and full-precision
+    into rotating fresh-buffer row ``fresh_slots[i]`` (= agg % window) —
+    readers within the freshness window take the fp row, everyone else
+    pays the quantization (``ring_gather_lossy``).  Padding events write
+    the scratch slot at weight 0, same as the exact ring.  Returns
+    ``(global, ring_q, ring_scales, fresh_buf)``.
+    """
+    q_leaves, tdef = jax.tree.flatten(ring_q)
+    s_leaves = jax.tree.leaves(ring_scales)
+    r_leaves = [None] * len(q_leaves) if ref is None else [
+        l.astype(jnp.float32) for l in jax.tree.leaves(ref)]
+
+    def step(carry, x):
+        g, qs, scs, fr = carry
+        p, w, s, fs = x
+        g = jax.tree.map(
+            lambda gg, pp: ((1 - w) * gg.astype(jnp.float32)
+                            + w * pp.astype(jnp.float32)).astype(gg.dtype),
+            g, p)
+        g_leaves = jax.tree.leaves(g)
+        new_qs, new_scs = [], []
+        for qL, scL, gL, rL in zip(qs, scs, g_leaves, r_leaves):
+            codes, scale = CP.quantize(_lossy_delta(gL, rL), bits)
+            new_qs.append(qL.at[s].set(codes))
+            new_scs.append(scL.at[s].set(scale))
+        fr = jax.tree.map(lambda f, gg: f.at[fs].set(gg.astype(f.dtype)),
+                          fr, g)
+        return (g, new_qs, new_scs, fr), None
+
+    (g, qs, scs, fr), _ = jax.lax.scan(
+        step, (global_params, q_leaves, s_leaves, fresh_buf),
+        (stacked_params, weights, write_slots, fresh_slots))
+    return g, jax.tree.unflatten(tdef, qs), jax.tree.unflatten(tdef, scs), fr
+
+
 # ---------------------------------------------------------------------------
 # snapshot ring buffer (bucketed async engine)
 # ---------------------------------------------------------------------------
@@ -293,23 +390,90 @@ class SnapshotRing:
     host-side :class:`RingAllocator`; capacity is ``max(cap, anchors + 1)``
     data slots + 1 scratch, which by construction bounds the store the same
     way the sequential dict bounds itself (cap + live anchors).
+
+    ``mode`` selects the anchor storage precision (the compression knob's
+    ring leg): ``fp32`` keeps full-precision rows (today's exact store);
+    ``quant``/``delta`` keep int-``bits`` codes + one f32 scale per
+    (slot, leaf) — ``delta`` encodes vs a fixed full-precision reference
+    (the global params at ring construction) — plus a small rotating
+    full-precision buffer of the last ``fresh_window`` aggregation steps,
+    so only anchors STALER than the window pay the quantization.
     """
 
-    def __init__(self, params, cap: int, n_anchors: int):
+    def __init__(self, params, cap: int, n_anchors: int,
+                 mode: str = "fp32", bits: int = 8, fresh_window: int = 8):
         self.alloc = RingAllocator(max(cap, n_anchors + 1) + 1)
-        self.params = jax.tree.map(
-            lambda x: jnp.zeros((self.alloc.slots,) + x.shape,
-                                x.dtype).at[0].set(x), params)
+        self.mode, self.bits = mode, bits
+        self.fresh_window = max(1, fresh_window)
+        slots = self.alloc.slots
+        if mode == "fp32":
+            self.params = jax.tree.map(
+                lambda x: jnp.zeros((slots,) + x.shape,
+                                    x.dtype).at[0].set(x), params)
+        elif mode in ("quant", "delta"):
+            # jnp.array COPIES: astype(f32) on f32 leaves is a no-op alias
+            # of the caller's params, and the bucket program donates its
+            # globals — an aliased ref would be use-after-donate
+            self.ref = jax.tree.map(lambda x: jnp.array(x, jnp.float32),
+                                    params) if mode == "delta" else None
+            r_leaves = [None] * len(jax.tree.leaves(params)) \
+                if self.ref is None else jax.tree.leaves(self.ref)
+            leaves, tdef = jax.tree.flatten(params)
+            qs, scs = [], []
+            for p, r in zip(leaves, r_leaves):
+                codes, scale = CP.quantize(_lossy_delta(p, r), bits)
+                qs.append(jnp.zeros((slots,) + p.shape,
+                                    codes.dtype).at[0].set(codes))
+                scs.append(jnp.ones((slots,), jnp.float32).at[0].set(scale))
+            self.q = jax.tree.unflatten(tdef, qs)
+            self.scales = jax.tree.unflatten(tdef, scs)
+            # window rows (agg % window) + one scratch row padding events
+            # write to (mirrors the int ring's scratch slot)
+            self.fresh_buf = jax.tree.map(
+                lambda x: jnp.zeros((self.fresh_window + 1,) + x.shape,
+                                    x.dtype).at[0].set(x), params)
+        else:
+            raise ValueError(f"SnapshotRing: bad mode {mode!r}")
         self.alloc.seed(0, slot=0)
 
     @property
     def scratch(self) -> int:
         return self.alloc.scratch
 
-    def read(self, agg: int):
-        """Materialize snapshot ``agg`` (tests / inspection)."""
+    def read(self, agg: int, stale: Optional[int] = None):
+        """Materialize snapshot ``agg`` (tests / inspection).  Lossy modes
+        need the reader's ``stale`` to pick the fp fresh row vs the
+        dequantized ring row — the same ``stale < fresh_window`` rule the
+        engines trace."""
         s = self.alloc.slot_of(agg)
-        return jax.tree.map(lambda x: x[s], self.params)
+        if self.mode == "fp32":
+            return jax.tree.map(lambda x: x[s], self.params)
+        if stale is not None and stale < self.fresh_window:
+            return jax.tree.map(lambda x: x[agg % self.fresh_window],
+                                self.fresh_buf)
+        r_leaves = [None] * len(jax.tree.leaves(self.q)) \
+            if self.ref is None else jax.tree.leaves(self.ref)
+        q_leaves, tdef = jax.tree.flatten(self.q)
+        out = []
+        for qL, scL, fL, rL in zip(q_leaves, jax.tree.leaves(self.scales),
+                                   jax.tree.leaves(self.fresh_buf),
+                                   r_leaves):
+            dec = CP.dequantize(qL[s], scL[s])
+            if rL is not None:
+                dec = dec + rL.astype(jnp.float32)
+            out.append(dec.astype(fL.dtype))
+        return jax.tree.unflatten(tdef, out)
+
+    def nbytes(self) -> int:
+        """Device bytes the anchor store holds — the memory axis the
+        lossy modes exist to shrink (recorded by the bench)."""
+        if self.mode == "fp32":
+            return sum(x.nbytes for x in jax.tree.leaves(self.params))
+        n = sum(x.nbytes for t in (self.q, self.scales, self.fresh_buf)
+                for x in jax.tree.leaves(t))
+        if self.ref is not None:
+            n += sum(x.nbytes for x in jax.tree.leaves(self.ref))
+        return n
 
 
 @CT.contract(post=_finite_out)

@@ -68,7 +68,7 @@ from repro.federated.events import (ArrivalProcess, DropoutProcess, Event,
 from repro.federated.heterogeneity import cycle_time
 from repro.launch.mesh import make_client_mesh
 from repro.models import init_params
-from repro.optim import apply_updates, make_optimizer
+from repro.optim import apply_updates, compression as CP, make_optimizer
 
 
 def _make_local_train(adapter: FamilyAdapter, opt):
@@ -173,6 +173,22 @@ class FLRun:
     #: granular Eq. 2 selection and the kernels' skip blocks stay in sync
     #: from the ONE knob; set explicitly only to decouple them.
     mask_block: int = 0
+    #: uplink compression — the comms/memory twin of ``kernels``, threaded
+    #: through every engine the same way.  "none" keeps today's exact
+    #: trajectories; the lossy modes compress each simulated
+    #: client->server delta at the aggregation boundary with per-client
+    #: error feedback (optim.compression, host-resident accumulators)
+    #: masked by the Eq. 2 masks: "topk" (top-``comp_frac`` coords, fp16
+    #: values), "quant" (dense int-``comp_bits``), "delta" (top-k +
+    #: int-``comp_bits`` values).  quant/delta additionally switch the
+    #: async snapshot ring to the matching lossy anchor store.
+    compression: str = "none"
+    comp_frac: float = 0.05
+    comp_bits: int = 8
+    #: async ring freshness window: anchors staler than this many
+    #: aggregation steps decode from the int ring rows; fresher ones read
+    #: a small rotating full-precision buffer (exact)
+    comp_fresh: int = 8
 
     def __post_init__(self):
         self.mask_block = self.mask_block or self.hcfg.mask_block or 128
@@ -191,6 +207,21 @@ class FLRun:
         self.cohort_log: List[List[int]] = []
         self.history: List[dict] = []
         self.round = 0
+        if self.compression not in CP.MODES:
+            raise ValueError(f"compression must be one of {CP.MODES}, "
+                             f"got {self.compression!r}")
+        if self.comp_fresh < 1:
+            raise ValueError("comp_fresh must be >= 1 (the ring keeps at "
+                             "least the newest anchor full-precision)")
+        self._comp_total, self._comp_leaves = \
+            CP.param_census(self.global_params)
+        #: uplink accounting: updates is a host int, coords a DEVICE scalar
+        #: accumulated eagerly (no host sync in the hot loops; converted
+        #: once in :meth:`uplink_bytes`)
+        self.uplink_updates = 0
+        self.uplink_coords = jnp.float32(0.0)
+        if self.compression != "none":
+            self._err_store = CP.HostErrorStore(self.global_params)
         self._init_helios()
         self._jit()
 
@@ -203,6 +234,46 @@ class FLRun:
     def _jit(self):
         self._local_train = jax.jit(_make_local_train(self.adapter, self.opt))
         self._eval_chunk = jax.jit(self.adapter.eval_chunk)
+        if self.compression != "none":
+            mode, frac, bits = self.compression, self.comp_frac, \
+                self.comp_bits
+
+            def compress_one(base, new_params, err, pmasks):
+                delta = jax.tree.map(
+                    lambda n, b: n.astype(jnp.float32)
+                    - b.astype(jnp.float32), new_params, base)
+                sent, new_err, coords = CP.compress_update(
+                    delta, err, mode, frac, bits, pmasks)
+                hat = jax.tree.map(
+                    lambda b, s: (b.astype(jnp.float32) + s).astype(b.dtype),
+                    base, sent)
+                return hat, new_err, coords
+
+            # the sequential engines' per-update codec (batched/sharded/
+            # bucketed engines trace the same math inside their programs)
+            self._compress_one = jax.jit(compress_one)
+
+    # ------------------------------------------------------------------
+    def _ring_mode(self) -> str:
+        """Snapshot-ring anchor precision keyed off the uplink knob:
+        quant/delta compress the ring the matching way; none/topk keep the
+        exact fp32 store (top-k has no dense-anchor analogue)."""
+        return self.compression \
+            if self.compression in ("quant", "delta") else "fp32"
+
+    def uplink_bytes(self) -> float:
+        """Total simulated client->server wire bytes so far.
+
+        Syncs ``uplink_coords`` once — call from benches/tests, never a
+        hot loop.  ``none`` moves every param dense-f32 per update; the
+        lossy formulas live in :func:`repro.optim.compression.uplink_bytes`.
+        """
+        if self.compression == "none":
+            return float(self.uplink_updates) * self._comp_total * 4.0
+        coords = float(self.uplink_coords)          # repro: noqa[R3]
+        return CP.uplink_bytes(self.compression, coords, self._comp_total,
+                               self._comp_leaves * self.uplink_updates,
+                               self.comp_bits)
 
     def _get_cached_program(self, key, builder):
         """LRU of compiled programs; elastic churn (or per-draw cohort /
@@ -368,6 +439,7 @@ class FLRun:
             # losses/ratios stay device values until _record_round's gate
             with CT.no_host_transfers("run_sync[" + self.scheme + "]"):
                 losses, ratios = self._train_cohort(cohort, cclients)
+            self.uplink_updates += len(cohort)
             CT.assert_finite(self.global_params, tag="run_sync.global_params")
             self._adapt_volumes(cohort, cclients, times, pace)
             clock += max(times)
@@ -392,8 +464,27 @@ class FLRun:
         every other engine replays)."""
         results = [self._client_cycle(c, self.global_params)
                    for c in cclients]
+        if self.compression != "none":
+            results = self._compress_results(cclients, results)
         self._aggregate(results)
         return [x[3] for x in results], [x[2] for x in results]
+
+    def _compress_results(self, cclients: List[Client], results):
+        """Lossy uplink for the sequential reference: replace each raw
+        new-params with the decoded compressed update (base + sent),
+        folding the un-sent residual into the client's error accumulator.
+        Eq. 2 masks gate the encoder, so frozen coordinates are never
+        sent (their residual survives until rotation wakes them)."""
+        base = self.global_params
+        out = []
+        for c, r in zip(cclients, results):
+            pmasks = self.adapter.expand_masks(r[1], base)
+            hat, new_err, coords = self._compress_one(
+                base, r[0], self._err_store.row(c.cid), pmasks)
+            self._err_store.set_row(c.cid, new_err)
+            self.uplink_coords = self.uplink_coords + coords
+            out.append((hat,) + r[1:])
+        return out
 
     def _adapt_volumes(self, cohort: List[int], cclients: List[Client],
                        times: List[float], pace: float) -> None:
@@ -452,6 +543,14 @@ class FLRun:
         clock = SimClock()
         self._reset_async_processes()
         snapshots = {0: self.global_params}
+        # lossy-ring reference semantics: snapshots stay full precision in
+        # the dict, but an anchor read past the freshness window decodes
+        # through the SAME quantize->dequantize the bucketed ring's rows
+        # pay at write time (bit-identical, deterministic)
+        ring_mode = self._ring_mode()
+        ring_ref = jax.tree.map(lambda x: x.astype(jnp.float32),
+                                self.global_params) \
+            if ring_mode == "delta" else None
         # bookkeeping exposed for tests/monitoring: the snapshot dict must
         # stay bounded by cap + len(clients) and never evict a live anchor
         self.snapshot_peak = 1
@@ -478,7 +577,16 @@ class FLRun:
             stale = agg_counter - c.staleness_anchor
             CT.check_staleness([stale], a=staleness_a, tag="run_async[seq]")
             with CT.no_host_transfers("run_async[seq]"):
-                new_params, _, _, loss = self._client_cycle(c, base)
+                if ring_mode != "fp32" and stale >= self.comp_fresh:
+                    base = AG.lossy_roundtrip(base, ring_ref, self.comp_bits)
+                new_params, masks_u, _, loss = self._client_cycle(c, base)
+                if self.compression != "none":
+                    pmasks = self.adapter.expand_masks(masks_u, base)
+                    new_params, new_err, coords = self._compress_one(
+                        base, new_params, self._err_store.row(c.cid), pmasks)
+                    self._err_store.set_row(c.cid, new_err)
+                    self.uplink_coords = self.uplink_coords + coords
+                self.uplink_updates += 1
                 w = mix_weight
                 if self.scheme == "afo":
                     w = mix_weight * AG.staleness_weight(stale, staleness_a)
@@ -606,20 +714,67 @@ class AsyncFLRun(FLRun):
         ones_masks = ST.full_masks(adapter.schema)
         local_train = _make_local_train(adapter, opt)
         afo = self.scheme == "afo"
+        comp, frac, bits = self.compression, self.comp_frac, self.comp_bits
+        ring_mode = self._ring_mode()
 
-        def bucket_fn(global_params, ring_params, base_slots, write_slots,
+        if comp == "none":
+            def bucket_fn(global_params, ring_params, base_slots,
+                          write_slots, batches, stale, valid, mix_w,
+                          stale_a):
+                base = jax.tree.map(
+                    lambda x: jnp.take(x, base_slots, axis=0), ring_params)
+                trained, losses = jax.vmap(
+                    lambda bp, b: local_train(bp, b, ones_masks))(base,
+                                                                  batches)
+                w = jnp.full((bpad,), 1.0, jnp.float32) * mix_w
+                if afo:
+                    w = w * AG.staleness_weights(stale, stale_a)
+                w = w * valid
+                new_global, new_ring = AG.mix_bucket_ring(
+                    global_params, ring_params, write_slots, trained, w)
+                return new_global, new_ring, losses
+
+            return bucket_fn
+
+        def bucket_fn(global_params, ring_state, ref, err, base_slots,
+                      write_slots, fresh_read, fresh_write, is_fresh,
                       batches, stale, valid, mix_w, stale_a):
-            base = jax.tree.map(lambda x: jnp.take(x, base_slots, axis=0),
-                                ring_params)
+            """Compressed bucket: decode anchors (lossy ring), train,
+            compress deltas with error feedback, mix the decoded updates
+            and re-encode the snapshot rows — all one program."""
+            if ring_mode == "fp32":                        # topk uplink
+                ring_params, = ring_state
+                base = jax.tree.map(
+                    lambda x: jnp.take(x, base_slots, axis=0), ring_params)
+            else:
+                q, sc, fr = ring_state
+                base = AG.ring_gather_lossy(q, sc, fr, ref, base_slots,
+                                            fresh_read, is_fresh)
             trained, losses = jax.vmap(
                 lambda bp, b: local_train(bp, b, ones_masks))(base, batches)
+            delta = jax.tree.map(
+                lambda t, b: t.astype(jnp.float32) - b.astype(jnp.float32),
+                trained, base)
+            sent, new_err, coords = jax.vmap(
+                lambda d, e: CP.compress_update(d, e, comp, frac, bits))(
+                    delta, err)
+            hat = jax.tree.map(
+                lambda b, s: (b.astype(jnp.float32) + s).astype(b.dtype),
+                base, sent)
             w = jnp.full((bpad,), 1.0, jnp.float32) * mix_w
             if afo:
                 w = w * AG.staleness_weights(stale, stale_a)
             w = w * valid
-            new_global, new_ring = AG.mix_bucket_ring(
-                global_params, ring_params, write_slots, trained, w)
-            return new_global, new_ring, losses
+            coords_sum = jnp.sum(coords * valid)
+            if ring_mode == "fp32":
+                new_global, new_ring = AG.mix_bucket_ring(
+                    global_params, ring_params, write_slots, hat, w)
+                return (new_global, (new_ring,), losses, new_err,
+                        coords_sum)
+            new_global, q2, sc2, fr2 = AG.mix_bucket_ring_lossy(
+                global_params, q, sc, fr, ref, write_slots, fresh_write,
+                hat, w, bits)
+            return new_global, (q2, sc2, fr2), losses, new_err, coords_sum
 
         return bucket_fn
 
@@ -658,7 +813,10 @@ class AsyncFLRun(FLRun):
         self._reset_async_processes()
         n = len(self.clients)
         by_id = {c.cid: c for c in self.clients}
-        ring = AG.SnapshotRing(self.global_params, snapshot_cap, n)
+        ring = AG.SnapshotRing(self.global_params, snapshot_cap, n,
+                               mode=self._ring_mode(), bits=self.comp_bits,
+                               fresh_window=self.comp_fresh)
+        lossy_ring = ring.mode != "fp32"
         for c in self.clients:
             c.staleness_anchor = 0
             ring.alloc.retain(0)
@@ -705,30 +863,72 @@ class AsyncFLRun(FLRun):
                     self.local_steps, self.batch_size, pad_to=bpad)
                 agg0 = self.agg_counter
                 base_slots, write_slots, stales = [], [], []
+                fresh_read, fresh_write, is_fresh = [], [], []
+                F = ring.fresh_window
                 for i, ev in enumerate(exec_evs):
                     c = by_id[ev.cid]
                     base_slots.append(ring.alloc.slot_of(c.staleness_anchor))
                     stales.append(agg0 + i - c.staleness_anchor)
+                    # freshness is decided per EVENT (same stale < window
+                    # rule as the sequential reference); the anchor's fp row
+                    # is still live because agg ids inside the window can't
+                    # have been overwritten (one fresh write per agg)
+                    fresh_read.append(c.staleness_anchor % F)
+                    is_fresh.append(1.0 if stales[-1] < F else 0.0)
                     new_agg = agg0 + i + 1
                     ring.alloc.release(c.staleness_anchor)
                     write_slots.append(ring.alloc.alloc(new_agg))
                     ring.alloc.retain(new_agg)
                     c.staleness_anchor = new_agg
+                    fresh_write.append(new_agg % F)
                 self.agg_counter = agg0 + b
                 CT.check_staleness(stales, a=staleness_a,
                                    tag="run_async[bucket]")
                 pad = bpad - b
                 bucket_fn = self._get_bucket_fn(bpad)
-                with CT.no_host_transfers("run_async[bucket]"):
-                    self.global_params, ring.params, losses = bucket_fn(
-                        self.global_params, ring.params,
-                        jnp.asarray(base_slots + [0] * pad, jnp.int32),
-                        jnp.asarray(write_slots + [ring.scratch] * pad,
-                                    jnp.int32),
-                        batches,
-                        jnp.asarray(stales + [0] * pad, jnp.float32),
-                        jnp.asarray([1.0] * b + [0.0] * pad, jnp.float32),
-                        float(mix_weight), float(staleness_a))
+                if self.compression == "none":
+                    with CT.no_host_transfers("run_async[bucket]"):
+                        self.global_params, ring.params, losses = bucket_fn(
+                            self.global_params, ring.params,
+                            jnp.asarray(base_slots + [0] * pad, jnp.int32),
+                            jnp.asarray(write_slots + [ring.scratch] * pad,
+                                        jnp.int32),
+                            batches,
+                            jnp.asarray(stales + [0] * pad, jnp.float32),
+                            jnp.asarray([1.0] * b + [0.0] * pad,
+                                        jnp.float32),
+                            float(mix_weight), float(staleness_a))
+                else:
+                    cids = [ev.cid for ev in exec_evs]
+                    err = self._err_store.gather(cids + [cids[0]] * pad)
+                    ring_state = ((ring.q, ring.scales, ring.fresh_buf)
+                                  if lossy_ring else (ring.params,))
+                    ref = ring.ref if lossy_ring else None
+                    with CT.no_host_transfers("run_async[bucket]"):
+                        (self.global_params, ring_state, losses, new_err,
+                         coords) = bucket_fn(
+                            self.global_params, ring_state, ref, err,
+                            jnp.asarray(base_slots + [0] * pad, jnp.int32),
+                            jnp.asarray(write_slots + [ring.scratch] * pad,
+                                        jnp.int32),
+                            jnp.asarray(fresh_read + [0] * pad, jnp.int32),
+                            # padding writes the fresh buffer's scratch row
+                            jnp.asarray(fresh_write + [F] * pad, jnp.int32),
+                            jnp.asarray(is_fresh + [1.0] * pad,
+                                        jnp.float32),
+                            batches,
+                            jnp.asarray(stales + [0] * pad, jnp.float32),
+                            jnp.asarray([1.0] * b + [0.0] * pad,
+                                        jnp.float32),
+                            float(mix_weight), float(staleness_a))
+                        self.uplink_coords = self.uplink_coords + coords
+                    if lossy_ring:
+                        ring.q, ring.scales, ring.fresh_buf = ring_state
+                    else:
+                        ring.params, = ring_state
+                    self._err_store.scatter(
+                        cids, jax.tree.map(lambda x: x[:b], new_err))
+                self.uplink_updates += b
                 self.events_processed += b
                 self.bucket_sizes.append(b)
                 done_fast += sum(1 for ev in exec_evs
@@ -824,8 +1024,10 @@ class BatchedFLRun(AsyncFLRun):
         agg_mode = hcfg.aggregation if scheme == "helios" else "uniform"
         ones_masks = ST.full_masks(adapter.schema)
         local_train = _make_local_train(adapter, opt)
+        comp, frac, bits = self.compression, self.comp_frac, self.comp_bits
 
-        def round_fn(global_params, sstate, s_batch, c_batch, unperm):
+        def round_fn(global_params, sstate, s_batch, c_batch, unperm,
+                     err=None):
             def cat(parts):
                 if len(parts) == 1:
                     return jax.tree.map(
@@ -866,11 +1068,31 @@ class BatchedFLRun(AsyncFLRun):
             stacked = cat(parts_p)
             ratios = cat(parts_r)
             losses = cat(parts_l)
-            pmasks = adapter.expand_masks_batch(cat(parts_m), global_params) \
-                if agg_mode == "masked_mean" else None
+            if comp == "none":
+                pmasks = adapter.expand_masks_batch(cat(parts_m),
+                                                    global_params) \
+                    if agg_mode == "masked_mean" else None
+                new_global = AG.aggregate_stacked(agg_mode, global_params,
+                                                  stacked, ratios, pmasks)
+                return new_global, new_sstate, ratios, losses
+            # compressed uplink: every stacked update goes through the
+            # codec + error feedback, masked so Eq. 2-frozen coordinates
+            # are never encoded (capable rows carry ones masks)
+            pm = adapter.expand_masks_batch(cat(parts_m), global_params)
+            delta = jax.tree.map(
+                lambda t, g: t.astype(jnp.float32) - g.astype(jnp.float32),
+                stacked, global_params)
+            sent, new_err, coords = jax.vmap(
+                lambda d, e, m: CP.compress_update(d, e, comp, frac, bits,
+                                                   m))(delta, err, pm)
+            stacked = jax.tree.map(
+                lambda g, s: (g.astype(jnp.float32) + s).astype(g.dtype),
+                global_params, sent)
+            pmasks = pm if agg_mode == "masked_mean" else None
             new_global = AG.aggregate_stacked(agg_mode, global_params,
                                               stacked, ratios, pmasks)
-            return new_global, new_sstate, ratios, losses
+            return (new_global, new_sstate, ratios, losses, new_err,
+                    jnp.sum(coords))
 
         return round_fn
 
@@ -893,9 +1115,20 @@ class BatchedFLRun(AsyncFLRun):
         if self.participation:
             return self._train_cohort_sampled(cohort, cclients)
         s_batch, c_batch = self._sample_cohort_batches()
-        self.global_params, self._sstate, ratios, losses = \
-            self._round_fn(self.global_params, self._sstate,
-                           s_batch, c_batch, self._unperm)
+        if self.compression == "none":
+            self.global_params, self._sstate, ratios, losses = \
+                self._round_fn(self.global_params, self._sstate,
+                               s_batch, c_batch, self._unperm)
+            return losses, ratios
+        # stacked rows are in original client order (cat() un-permutes),
+        # so the error rows gather/scatter in that same order
+        cids = [c.cid for c in self.clients]
+        err = self._err_store.gather(cids)
+        (self.global_params, self._sstate, ratios, losses, new_err,
+         coords) = self._round_fn(self.global_params, self._sstate,
+                                  s_batch, c_batch, self._unperm, err)
+        self.uplink_coords = self.uplink_coords + coords
+        self._err_store.scatter(cids, new_err)
         # device arrays on purpose — _record_round converts behind the gate
         return losses, ratios
 
@@ -928,8 +1161,18 @@ class BatchedFLRun(AsyncFLRun):
         sstate = ST.stack_states([cclients[j].helios_state
                                   for j in s_pos]) if s_pos else None
         round_fn = self._get_round_fn(len(s_pos), len(c_pos))
-        self.global_params, sstate, ratios, losses = round_fn(
-            self.global_params, sstate, stack(s_pos), stack(c_pos), unperm)
+        if self.compression == "none":
+            self.global_params, sstate, ratios, losses = round_fn(
+                self.global_params, sstate, stack(s_pos), stack(c_pos),
+                unperm)
+        else:
+            cids = [c.cid for c in cclients]
+            err = self._err_store.gather(cids)
+            (self.global_params, sstate, ratios, losses, new_err,
+             coords) = round_fn(self.global_params, sstate, stack(s_pos),
+                                stack(c_pos), unperm, err)
+            self.uplink_coords = self.uplink_coords + coords
+            self._err_store.scatter(cids, new_err)
         if s_pos:
             for j, st in zip(s_pos, ST.unstack_states(sstate, len(s_pos))):
                 cclients[j].helios_state = st
@@ -1075,8 +1318,10 @@ class ShardedFLRun(BatchedFLRun):
         agg_mode = hcfg.aggregation if scheme == "helios" else "uniform"
         ones_masks = ST.full_masks(adapter.schema)
         local_train = _make_local_train(adapter, opt)
+        comp, frac, bits = self.compression, self.comp_frac, self.comp_bits
 
-        def round_body(global_params, cstate, batches, is_soft, valid):
+        def round_body(global_params, cstate, batches, is_soft, valid,
+                       err=None):
             # block-local views: leading axis = kpad / n_devices rows
             def one_client(st, b, soft_flag):
                 st_b = ST.begin_cycle(st, hcfg_eff)
@@ -1099,11 +1344,27 @@ class ShardedFLRun(BatchedFLRun):
 
             p, new_state, ratios, losses, masks = jax.vmap(one_client)(
                 cstate, batches, is_soft)
+            pm = adapter.expand_masks_batch(masks, global_params) \
+                if (comp != "none" or agg_mode == "masked_mean") else None
+            if comp != "none":
+                # codec runs shard-local on each device's cohort rows;
+                # only the coordinate count crosses devices (one psum)
+                delta = jax.tree.map(
+                    lambda t, g: t.astype(jnp.float32)
+                    - g.astype(jnp.float32), p, global_params)
+                sent, new_err, coords = jax.vmap(
+                    lambda d, e, m: CP.compress_update(d, e, comp, frac,
+                                                       bits, m))(
+                        delta, err, pm)
+                p = jax.tree.map(
+                    lambda g, s: (g.astype(jnp.float32) + s).astype(g.dtype),
+                    global_params, sent)
+                coords = jax.lax.psum(jnp.sum(coords * valid), "clients")
             base = ratios if agg_mode != "uniform" else jnp.ones_like(ratios)
             w = base * valid
             a = w / jnp.maximum(jax.lax.psum(jnp.sum(w), "clients"), 1e-9)
             if agg_mode == "masked_mean":
-                pmasks = adapter.expand_masks_batch(masks, global_params)
+                pmasks = pm
                 num = jax.tree.map(
                     lambda m, t: jnp.sum(
                         a.reshape((-1,) + (1,) * (t.ndim - 1)) * m
@@ -1125,17 +1386,22 @@ class ShardedFLRun(BatchedFLRun):
                 part = jax.lax.psum(part, "clients")
                 new_g = jax.tree.map(lambda g, t: t.astype(g.dtype),
                                      global_params, part)
+            if comp != "none":
+                return new_g, new_state, ratios, losses, new_err, coords
             return new_g, new_state, ratios, losses
 
         # check_rep=False: remat checkpoint_name (transformer stacks) has no
         # replication rule on current JAX; the psum above still leaves
         # new_g replicated in practice
+        in_specs = (P(), P("clients"), P("clients"), P("clients"),
+                    P("clients"))
+        out_specs = (P(), P("clients"), P("clients"), P("clients"))
+        if comp != "none":
+            in_specs += (P("clients"),)                    # err rows
+            out_specs += (P("clients"), P())               # new_err, coords
         sharded = shard_map(
             round_body, mesh=self._mesh,
-            in_specs=(P(), P("clients"), P("clients"), P("clients"),
-                      P("clients")),
-            out_specs=(P(), P("clients"), P("clients"), P("clients")),
-            check_rep=False)
+            in_specs=in_specs, out_specs=out_specs, check_rep=False)
         return jax.jit(sharded)
 
     # -- template hooks -------------------------------------------------
@@ -1151,8 +1417,19 @@ class ShardedFLRun(BatchedFLRun):
             self.rng, self.train_data, [c.data_idx for c in cclients],
             self.local_steps, self.batch_size, pad_to=kpad)
         cstate = ST.gather_states_host(self._pop_state, idx)
-        self.global_params, new_cstate, ratios, losses = self._round_fn(
-            self.global_params, cstate, batches, is_soft, valid)
+        if self.compression == "none":
+            self.global_params, new_cstate, ratios, losses = self._round_fn(
+                self.global_params, cstate, batches, is_soft, valid)
+        else:
+            err = self._err_store.gather(
+                [self.clients[i].cid for i in idx])
+            (self.global_params, new_cstate, ratios, losses, new_err,
+             coords) = self._round_fn(self.global_params, cstate, batches,
+                                      is_soft, valid, err)
+            self.uplink_coords = self.uplink_coords + coords
+            self._err_store.scatter(
+                [self.clients[i].cid for i in cohort],
+                jax.tree.map(lambda x: x[:k], new_err))
         ST.scatter_states_host(
             self._pop_state, cohort,
             jax.tree.map(lambda x: x[:k], new_cstate))

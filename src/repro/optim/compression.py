@@ -1,41 +1,178 @@
-"""Top-k gradient sparsification with error feedback (refs [19][20]).
+"""Uplink compression with error feedback (refs [19][20]) — the comms
+companion of soft-training: soft-training shrinks the COMPUTE volume, the
+codecs here shrink the COMMUNICATION volume (client -> server deltas) and
+the MEMORY volume (the async snapshot ring's anchors), and Prop. 2's
+variance bound is exactly the [19] analysis, so the two compose cleanly.
 
-# repro: noqa[R6] — tests-only today: wired into the FL uplink when the
-communication-volume experiments land (tracked in ROADMAP.md).
+Three lossy modes, all differentiable-seam style (the engines thread a
+``compression`` knob exactly like ``kernels``):
 
-Used on the FL uplink (client -> server) as the distributed-optimization
-companion of soft-training: soft-training shrinks the COMPUTE volume, top-k
-compression shrinks the COMMUNICATION volume, and Prop. 2's variance bound is
-exactly the [19] analysis, so the two compose cleanly.
+* ``topk``  — per-leaf magnitude top-k (k = max(1, round(frac*size)))
+  with fp16 values on the wire (standard DGC practice [20]); the fp16
+  rounding is absorbed by the error-feedback residual, so telescoping is
+  exact by construction.
+* ``quant`` — dense symmetric int-``bits`` quantization per leaf
+  (scale = max|x| / (2^(bits-1)-1)); round-trip error <= scale/2.
+* ``delta`` — top-k coordinates with int-``bits`` quantized values: the
+  sparsity of ``topk`` at the value width of ``quant``.
 
 Error feedback (Deep Gradient Compression, [20]): the un-sent residual is
-accumulated locally and added to the next cycle's gradient, which empirically
-removes the convergence penalty of hard top-k.
+accumulated per client and added to the next cycle's delta, which
+empirically removes the convergence penalty of hard top-k.  Composed with
+the Eq. 2 masks, frozen-neuron coordinates are never encoded or sent
+(``compress_update(..., masks=...)`` zeroes them BEFORE encoding), but
+their residual survives until the rotation wakes them.
+
+Everything in :func:`compress_update` is shape-static (``jax.lax.top_k``
+with a Python-int k) and vmap-safe, so a whole stacked cohort compresses
+inside one jitted round/bucket program.  :class:`HostErrorStore` keeps the
+per-client residuals HOST-resident (lazily materialized rows, like PR 3's
+population state), so a million-client population only pays memory for
+clients that have actually participated.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import contracts as CT
+
+#: the engine knob values (mirrors kernels="pallas"|"reference")
+MODES = ("none", "topk", "quant", "delta")
 
 
 def init_error(params):
-    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    """Zero error-feedback accumulators, one per param leaf (param dtype —
+    the residual lives in the same space as the update it absorbs)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+
+
+def leaf_k(size: int, frac: float) -> int:
+    """The per-leaf kept-coordinate count top-k actually uses."""
+    return max(1, int(round(frac * size))) if size else 0
 
 
 def _leaf_topk(x: jax.Array, frac: float) -> jax.Array:
-    """Zero all but the top-``frac`` |values| of one leaf."""
+    """Zero all but the top-``frac`` |values| of one leaf.
+
+    Built on ``jax.lax.top_k`` over |x| with a STATIC k: O(n log k) and a
+    fixed output shape, so the transform vmaps over a stacked cohort and
+    never traces a ragged threshold (the old full ``jnp.sort`` was
+    O(n log n) per leaf per client).
+    """
     if x.size == 0:
         return x
-    k = max(1, int(round(frac * x.size)))
+    k = leaf_k(x.size, frac)
     flat = jnp.abs(x.reshape(-1))
-    thresh = jnp.sort(flat)[-k]
+    thresh = jax.lax.top_k(flat, k)[0][-1]
     return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
 
 
+def quantize(x: jax.Array, bits: int = 8) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-leaf quantization: (int codes, f32 scale).
+
+    ``scale = max|x| / (2^(bits-1)-1)`` so every value is in range (no
+    clipping error) and the round-trip error is <= scale/2.  Exact zeros
+    encode as exact zeros — masked coordinates cost nothing downstream.
+    """
+    lim = float(2 ** (bits - 1) - 1)
+    code_dtype = jnp.int8 if bits <= 8 else jnp.int32
+    x = x.astype(jnp.float32)
+    if x.size == 0:
+        return jnp.zeros(x.shape, code_dtype), jnp.float32(1.0)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / lim
+    q = jnp.clip(jnp.round(x / scale), -lim, lim)
+    return q.astype(code_dtype), scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _roundtrip_quant(x: jax.Array, bits: int) -> jax.Array:
+    q, s = quantize(x, bits)
+    return dequantize(q, s)
+
+
+def _roundtrip_f16(x: jax.Array) -> jax.Array:
+    return x.astype(jnp.float16).astype(jnp.float32)
+
+
+def compress_update(delta, error, mode: str, frac: float = 0.05,
+                    bits: int = 8, masks=None):
+    """Encode+decode one client->server update with error feedback.
+
+    ``delta``: the raw update pytree (new_params - base), ``error``: this
+    client's residual accumulator, ``masks``: optional param-shaped 0/1
+    tree (expanded Eq. 2 masks) — masked coordinates are zeroed BEFORE
+    encoding so they are never sent, while their residual persists.
+
+    Returns ``(sent, new_error, sent_coords)``: the decoded update the
+    server applies (what a real receiver reconstructs from the wire
+    format), the residual to keep client-side, and the encoded-coordinate
+    count (a device scalar; no host sync).  Telescoping holds exactly:
+    ``sent + new_error == delta + error`` on unmasked coordinates.
+    """
+    if mode not in MODES or mode == "none":
+        raise ValueError(f"compress_update: bad mode {mode!r}")
+    corrected = jax.tree.map(
+        lambda d, e: d.astype(jnp.float32) + e.astype(jnp.float32),
+        delta, error)
+    avail = corrected if masks is None else \
+        jax.tree.map(lambda c, m: c * m, corrected, masks)
+    if mode == "topk":
+        sent = jax.tree.map(lambda a: _roundtrip_f16(_leaf_topk(a, frac)),
+                            avail)
+    elif mode == "delta":
+        sent = jax.tree.map(
+            lambda a: _roundtrip_quant(_leaf_topk(a, frac), bits), avail)
+    else:                                                  # quant (dense)
+        sent = jax.tree.map(lambda a: _roundtrip_quant(a, bits), avail)
+    new_error = jax.tree.map(lambda c, s, e: (c - s).astype(e.dtype),
+                             corrected, sent, error)
+    if mode == "quant":
+        # dense wire format: every unmasked coordinate is encoded, sent or
+        # not — count mask coverage, not nonzeros
+        if masks is None:
+            coords = jnp.float32(sum(l.size for l in jax.tree.leaves(sent)))
+        else:
+            coords = sum(jnp.sum(m) for m in jax.tree.leaves(masks))
+    else:
+        coords = sum(jnp.sum(s != 0).astype(jnp.float32)
+                     for s in jax.tree.leaves(sent))
+    return sent, new_error, coords
+
+
+def uplink_bytes(mode: str, coords: float, total: int, n_leaves: int,
+                 bits: int = 8, index_bytes: int = 4) -> float:
+    """Wire bytes for ``coords`` encoded coordinates in one update.
+
+    * none  — dense f32, everything moves.
+    * topk  — (index, fp16 value) per kept coordinate.
+    * quant — ``bits``-bit code per encoded coordinate + one f32 scale per
+      leaf (dense: no indices).
+    * delta — (index, ``bits``-bit value) per kept coordinate + scales.
+    """
+    if mode == "none":
+        return float(total) * 4.0
+    if mode == "topk":
+        return coords * (index_bytes + 2.0)
+    if mode == "quant":
+        return coords * bits / 8.0 + n_leaves * 4.0
+    if mode == "delta":
+        return coords * (index_bytes + bits / 8.0) + n_leaves * 4.0
+    raise ValueError(mode)
+
+
 def compress(grads, error, frac: float) -> Tuple[dict, dict, jax.Array]:
-    """Returns (sparse_grads, new_error, sent_fraction)."""
+    """Legacy 3-tuple top-k API: (sparse_grads, new_error, sent_fraction).
+
+    Full-precision values (no wire rounding) — kept for callers that use
+    the sparsifier as an optimizer transform rather than a wire codec.
+    """
     corrected = jax.tree.map(
         lambda g, e: g.astype(jnp.float32) + e, grads, error)
     sparse = jax.tree.map(lambda c: _leaf_topk(c, frac), corrected)
@@ -47,7 +184,68 @@ def compress(grads, error, frac: float) -> Tuple[dict, dict, jax.Array]:
 
 def compressed_bytes(grads, frac: float, index_bytes: int = 4,
                      value_bytes: int = 4) -> int:
-    """Uplink bytes for a top-k sparse encoding (index+value per coord)."""
-    total = sum(l.size for l in jax.tree.leaves(grads))
-    k = int(round(frac * total))
+    """Uplink bytes for a top-k sparse encoding (index+value per coord).
+
+    Accounts per LEAF — ``k = max(1, round(frac*size))`` summed over
+    leaves — matching what :func:`compress`/:func:`compress_update`
+    actually keep (a single global round() disagrees with the per-leaf
+    floors whenever small leaves are present).
+    """
+    k = sum(leaf_k(l.size, frac) for l in jax.tree.leaves(grads))
     return k * (index_bytes + value_bytes)
+
+
+class HostErrorStore:
+    """Host-resident error-feedback state, one lazily-materialized row per
+    client.
+
+    The stacked-cohort engines gather the cohort's rows to device each
+    round and scatter the updated residuals back (the same host-resident
+    pattern as ``soft_train.host_states``: host arrays are uncommitted jit
+    inputs, so the round program's input signature is draw-invariant).
+    Rows exist only for clients that have actually been scattered to —
+    at N=10^6 with K clients/round the store grows with participation
+    coverage, not the population, which is what keeps the million-client
+    bench inside its host-memory budget.
+    """
+
+    def __init__(self, params):
+        # one shared zero row (copied on gather by np.stack) — absent
+        # clients read as zero residual without N materialized rows
+        self._zero = jax.tree.map(
+            lambda p: np.zeros(p.shape, np.dtype(p.dtype)), params)
+        self._rows: Dict[int, dict] = {}
+
+    def gather(self, cids: Sequence[int]) -> dict:
+        """Stacked (len(cids),)+shape rows; untouched clients read zeros."""
+        rows = [self._rows.get(int(c), self._zero) for c in cids]
+        return jax.tree.map(lambda *xs: np.stack(xs), *rows)
+
+    def scatter(self, cids: Sequence[int], stacked) -> None:
+        """Write rows back (``cids`` duplicate-free; device leaves pulled
+        host-side — an INTENDED transfer, like the population scatter)."""
+        with CT.expected_transfer("compression.error_store.scatter"):
+            host = jax.tree.map(np.asarray, stacked)
+        for i, c in enumerate(cids):
+            self._rows[int(c)] = jax.tree.map(lambda x: np.array(x[i]), host)
+
+    def row(self, cid: int) -> dict:
+        """One client's residual (host leaves; zeros if never touched)."""
+        return self._rows.get(int(cid), self._zero)
+
+    def set_row(self, cid: int, tree) -> None:
+        with CT.expected_transfer("compression.error_store.scatter"):
+            self._rows[int(cid)] = jax.tree.map(np.asarray, tree)
+
+    def touched(self) -> int:
+        return len(self._rows)
+
+    def nbytes(self) -> int:
+        return sum(x.nbytes for r in self._rows.values()
+                   for x in jax.tree.leaves(r))
+
+
+def param_census(params) -> Tuple[int, int]:
+    """(total scalar count, leaf count) — the uplink-bytes denominators."""
+    leaves = jax.tree.leaves(params)
+    return sum(l.size for l in leaves), len(leaves)

@@ -1,0 +1,210 @@
+"""Properties of the uplink codec (optim/compression.py): top-k keep
+bounds, error-feedback telescoping, quantization round-trip error, exact
+zeros on Eq. 2-masked coordinates, and the byte accounting the bench and
+``FLRun.uplink_bytes`` report.
+
+Hypothesis properties run when hypothesis is installed (same guard as
+test_theory_property.py); the deterministic cases always run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import compression as CP
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    HAVE_HYP = True
+except ImportError:                                     # pragma: no cover
+    HAVE_HYP = False
+
+needs_hyp = pytest.mark.skipif(not HAVE_HYP, reason="hypothesis missing")
+
+
+def _tree(seed=0, shapes=((8, 16), (16,), (4, 4, 3))):
+    rng = np.random.default_rng(seed)
+    return {f"w{i}": jnp.asarray(rng.normal(size=s).astype(np.float32))
+            for i, s in enumerate(shapes)}
+
+
+def _total(tree):
+    return sum(l.size for l in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# deterministic unit cases
+# ---------------------------------------------------------------------------
+
+
+def test_init_error_respects_param_dtype():
+    params = {"a": jnp.zeros((3, 2), jnp.float16),
+              "b": jnp.zeros((4,), jnp.float32)}
+    err = CP.init_error(params)
+    assert err["a"].dtype == jnp.float16
+    assert err["b"].dtype == jnp.float32
+    assert all(float(jnp.sum(jnp.abs(l))) == 0.0
+               for l in jax.tree.leaves(err))
+
+
+def test_compressed_bytes_per_leaf_accounting():
+    """Bytes must sum per-leaf k = max(1, round(frac*size)) — a tree of
+    many tiny leaves keeps one coord per leaf, which a single global
+    round() under-reports."""
+    g = {f"t{i}": jnp.ones((3,)) for i in range(10)}      # 30 params
+    # frac=0.01: global round(0.3) == 0, per-leaf max(1, round(0.03)) == 1
+    assert CP.compressed_bytes(g, 0.01) == 10 * (4 + 4)
+    big = {"w": jnp.ones((1000,))}
+    assert CP.compressed_bytes(big, 0.05) == 50 * (4 + 4)
+
+
+def test_topk_keeps_largest_magnitudes():
+    x = jnp.asarray(np.arange(1.0, 101.0, dtype=np.float32))
+    kept = CP._leaf_topk(x, 0.05)
+    nz = np.flatnonzero(np.asarray(kept))
+    assert len(nz) == 5
+    assert set(nz.tolist()) == set(range(95, 100))
+
+
+def test_quant_exact_zero_and_sign():
+    x = jnp.asarray([0.0, -1.0, 1.0, 0.5, 0.0], jnp.float32)
+    q, s = CP.quantize(x, bits=8)
+    dec = np.asarray(CP.dequantize(q, s))
+    assert dec[0] == 0.0 and dec[4] == 0.0                # exact zeros
+    assert dec[1] < 0 < dec[2]
+    np.testing.assert_allclose(dec, np.asarray(x), atol=float(s) / 2)
+
+
+def test_masked_coords_never_sent_residual_preserved():
+    """Eq. 2-masked coordinates encode as exact zeros in every mode, and
+    their corrected value survives IN FULL in the residual (the rotation
+    can wake them later)."""
+    delta = _tree(1)
+    err = CP.init_error(delta)
+    masks = jax.tree.map(lambda x: (jnp.arange(x.size).reshape(x.shape)
+                                    % 2).astype(jnp.float32), delta)
+    for mode in ("topk", "quant", "delta"):
+        sent, new_err, _ = CP.compress_update(delta, err, mode, frac=0.5,
+                                              bits=8, masks=masks)
+        for s, m, d, e in zip(jax.tree.leaves(sent), jax.tree.leaves(masks),
+                              jax.tree.leaves(delta),
+                              jax.tree.leaves(new_err)):
+            s, m, d, e = map(np.asarray, (s, m, d, e))
+            assert np.all(s[m == 0] == 0.0), mode
+            np.testing.assert_allclose(e[m == 0], d[m == 0], rtol=1e-6,
+                                       err_msg=mode)
+
+
+def test_uplink_bytes_formulas():
+    assert CP.uplink_bytes("none", 0, 100, 3) == 400.0
+    assert CP.uplink_bytes("topk", 10, 100, 3) == 10 * 6.0
+    assert CP.uplink_bytes("quant", 100, 100, 3, bits=8) == 100 + 12.0
+    assert CP.uplink_bytes("delta", 10, 100, 3, bits=8) == 10 * 5 + 12.0
+    with pytest.raises(ValueError):
+        CP.uplink_bytes("bogus", 0, 1, 1)
+
+
+def test_host_error_store_lazy_and_roundtrip():
+    params = _tree(2)
+    store = CP.HostErrorStore(params)
+    assert store.touched() == 0 and store.nbytes() == 0
+    # untouched reads are zeros and do NOT materialize rows
+    z = store.gather([3, 7])
+    assert all(float(np.abs(l).sum()) == 0.0 for l in jax.tree.leaves(z))
+    assert store.touched() == 0
+    upd = jax.tree.map(lambda x: x + 1.0, z)
+    store.scatter([3, 7], upd)
+    assert store.touched() == 2 and store.nbytes() > 0
+    back = store.gather([7, 3, 5])
+    rows = np.asarray(jax.tree.leaves(back)[0])
+    assert np.all(rows[0] == 1.0) and np.all(rows[1] == 1.0)
+    assert np.all(rows[2] == 0.0)                         # still lazy
+    one = store.row(3)
+    assert float(np.asarray(jax.tree.leaves(one)[0]).mean()) == 1.0
+
+
+def test_compress_update_rejects_none():
+    t = _tree(3)
+    with pytest.raises(ValueError):
+        CP.compress_update(t, CP.init_error(t), "none")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (guarded like tests/test_async_engine.py)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYP:
+
+    finite = hst.floats(-10.0, 10.0, allow_nan=False, allow_infinity=False,
+                        width=32)
+
+    @needs_hyp
+    @settings(max_examples=25, deadline=None)
+    @given(hst.lists(finite, min_size=4, max_size=64),
+           hst.floats(0.01, 0.5))
+    def test_topk_sent_fraction_bound(vals, frac):
+        """The number of sent coordinates never exceeds the per-leaf
+        k = max(1, round(frac*size)) budget."""
+        x = jnp.asarray(np.asarray(vals, np.float32))
+        kept = np.asarray(CP._leaf_topk(x, frac))
+        assert int((kept != 0).sum()) <= CP.leaf_k(x.size, frac)
+
+    @needs_hyp
+    @settings(max_examples=15, deadline=None)
+    @given(hst.integers(0, 2 ** 31 - 1), hst.floats(0.05, 0.5),
+           hst.sampled_from(["topk", "quant", "delta"]))
+    def test_error_feedback_telescoping(seed, frac, mode):
+        """sum over cycles of sent + final residual == sum of raw deltas,
+        exactly (by construction: new_err = corrected - sent) —
+        compression never loses mass, it only defers it."""
+        rng = np.random.default_rng(seed)
+        shapes = ((6, 5), (7,))
+        deltas = [{f"w{i}": jnp.asarray(
+            rng.normal(size=s).astype(np.float32))
+            for i, s in enumerate(shapes)} for _ in range(4)]
+        err = CP.init_error(deltas[0])
+        acc = jax.tree.map(jnp.zeros_like, deltas[0])
+        for d in deltas:
+            sent, err, _ = CP.compress_update(d, err, mode, frac=frac,
+                                              bits=8)
+            acc = jax.tree.map(lambda a, s: a + s, acc, sent)
+        total = jax.tree.map(
+            lambda *xs: sum(x.astype(jnp.float32) for x in xs), *deltas)
+        recon = jax.tree.map(lambda a, e: a + e.astype(jnp.float32),
+                             acc, err)
+        for t, r in zip(jax.tree.leaves(total), jax.tree.leaves(recon)):
+            np.testing.assert_allclose(np.asarray(t), np.asarray(r),
+                                       atol=1e-4)
+
+    @needs_hyp
+    @settings(max_examples=25, deadline=None)
+    @given(hst.lists(finite, min_size=1, max_size=64),
+           hst.sampled_from([4, 6, 8]))
+    def test_quant_roundtrip_error_bound(vals, bits):
+        """|x - dequant(quant(x))| <= scale/2 everywhere (symmetric codes,
+        no clipping: scale is set from max|x|)."""
+        x = jnp.asarray(np.asarray(vals, np.float32))
+        q, s = CP.quantize(x, bits)
+        dec = np.asarray(CP.dequantize(q, s))
+        assert np.max(np.abs(dec - np.asarray(x))) <= float(s) / 2 + 1e-7
+
+    @needs_hyp
+    @settings(max_examples=25, deadline=None)
+    @given(hst.integers(0, 2 ** 31 - 1))
+    def test_lossy_ring_roundtrip_consistency(seed):
+        """aggregation.lossy_roundtrip (the sequential reference's
+        stale-anchor decode) is idempotent: decoding a decoded tree
+        changes nothing — the write-time and read-time codecs are the
+        same math."""
+        from repro.core import aggregation as AG
+        rng = np.random.default_rng(seed)
+        params = {"w": jnp.asarray(
+            rng.normal(size=(5, 4)).astype(np.float32))}
+        ref = jax.tree.map(lambda x: x * 0.5, params)
+        for r in (None, ref):
+            once = AG.lossy_roundtrip(params, r, 8)
+            twice = AG.lossy_roundtrip(once, r, 8)
+            for a, b in zip(jax.tree.leaves(once), jax.tree.leaves(twice)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           atol=1e-6)

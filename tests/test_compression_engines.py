@@ -1,0 +1,194 @@
+"""The compression seam across engines.
+
+Pins (a) ``compression="none"`` to today's trajectories (the knob is a
+pure no-op), (b) the lossy modes to ONE trajectory across seq, batched,
+sharded and bucketed-async engines (the codec + error feedback + lossy
+ring are execution-layout-invariant), (c) the >= 10x topk uplink
+reduction the ISSUE requires, and (d) the host-side error store's
+lazy growth + the compile budgets under contracts.
+"""
+import os
+
+if os.environ.get("REPRO_HOST_DEVICES") and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_HOST_DEVICES"])
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import contracts as CT
+from repro.configs import CNNS, HeliosConfig, reduced
+from repro.core import aggregation as AG
+from repro.data.federated import partition_iid
+from repro.data.synthetic import class_gaussian_images
+from repro.federated import (AsyncFLRun, BatchedFLRun, FLRun, ShardedFLRun,
+                             make_fleet, setup_clients)
+
+LOSSY = ("topk", "quant", "delta")
+
+
+@pytest.fixture(scope="module")
+def setting():
+    cfg = reduced(CNNS["lenet"])
+    imgs, labels = class_gaussian_images(400, cfg.image_size,
+                                         cfg.in_channels, cfg.num_classes,
+                                         seed=0)
+    ti, tl = class_gaussian_images(64, cfg.image_size, cfg.in_channels,
+                                   cfg.num_classes, seed=9)
+    parts = partition_iid(len(labels), 8, seed=0)
+    return cfg, {"images": imgs, "labels": labels}, \
+        {"images": ti, "labels": tl}, parts
+
+
+def _make(setting, cls, scheme, **kw):
+    cfg, train, test, parts = setting
+    hcfg = HeliosConfig()
+    clients = setup_clients(make_fleet(4, 4), parts, hcfg)
+    return cls(cfg, hcfg, scheme, clients, train, test,
+               local_steps=1, batch_size=8, lr=0.1, seed=0, eval_batch=64,
+               **kw)
+
+
+def _diff(a, b):
+    return max(float(np.max(np.abs(np.asarray(x, np.float32)
+                                   - np.asarray(y, np.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# none mode is a no-op; lossy modes are one trajectory across engines
+# ---------------------------------------------------------------------------
+
+
+def test_none_mode_is_default_noop(setting):
+    """compression='none' produces bit-identical params, history and
+    uplink accounting to not passing the knob at all."""
+    a = _make(setting, FLRun, "helios")
+    a.run_sync(2, eval_every=0)
+    b = _make(setting, FLRun, "helios", compression="none")
+    b.run_sync(2, eval_every=0)
+    assert _diff(a.global_params, b.global_params) == 0.0
+    assert a.uplink_bytes() == b.uplink_bytes() > 0
+
+
+@pytest.mark.parametrize("mode", LOSSY)
+def test_sync_cross_engine_wall(setting, mode):
+    """seq <-> batched <-> sharded, same lossy mode: one trajectory (the
+    codec runs inside each engine's program layout) and byte-identical
+    uplink accounting."""
+    runs = []
+    for cls in (FLRun, BatchedFLRun, ShardedFLRun):
+        r = _make(setting, cls, "helios", compression=mode)
+        r.run_sync(3, eval_every=0)
+        runs.append(r)
+    seq, bat, sh = runs
+    assert _diff(seq.global_params, bat.global_params) < 1e-4
+    assert _diff(seq.global_params, sh.global_params) < 1e-4
+    assert seq.uplink_updates == bat.uplink_updates == sh.uplink_updates
+    b = [r.uplink_bytes() for r in runs]
+    assert abs(b[0] - b[1]) < 1e-3 and abs(b[0] - b[2]) < 1e-3, b
+
+
+@pytest.mark.parametrize("mode", LOSSY)
+def test_sync_cross_engine_wall_sampled(setting, mode):
+    """Partial participation exercises the per-cohort error-row gather /
+    scatter path (row identity keyed by cid, stable across draws)."""
+    seq = _make(setting, FLRun, "helios", compression=mode,
+                participation=4)
+    seq.run_sync(3, eval_every=0)
+    bat = _make(setting, BatchedFLRun, "helios", compression=mode,
+                participation=4)
+    bat.run_sync(3, eval_every=0)
+    assert seq.cohort_log == bat.cohort_log
+    assert _diff(seq.global_params, bat.global_params) < 1e-4
+    assert abs(seq.uplink_bytes() - bat.uplink_bytes()) < 1e-3
+
+
+@pytest.mark.parametrize("mode", LOSSY)
+@pytest.mark.parametrize("scheme", ["asyn", "afo"])
+def test_async_cross_engine_wall(setting, scheme, mode):
+    """Sequential run_async <-> bucketed AsyncFLRun under compression:
+    same events, same trajectory (the bucketed lossy ring's write-time
+    codes decode to exactly what the sequential reference recomputes at
+    read time), same bytes."""
+    seq = _make(setting, FLRun, scheme, compression=mode, comp_fresh=2)
+    seq.run_async(12, eval_every=0, snapshot_cap=16)
+    buc = _make(setting, AsyncFLRun, scheme, compression=mode,
+                comp_fresh=2)
+    buc.run_async(12, eval_every=0, snapshot_cap=16)
+    assert seq.events_processed == buc.events_processed
+    assert seq.agg_counter == buc.agg_counter
+    assert _diff(seq.global_params, buc.global_params) < 1e-4
+    assert abs(seq.uplink_bytes() - buc.uplink_bytes()) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# the numbers the ISSUE requires
+# ---------------------------------------------------------------------------
+
+
+def test_topk_uplink_reduction_at_least_10x(setting):
+    dense = _make(setting, BatchedFLRun, "helios")
+    dense.run_sync(2, eval_every=0)
+    topk = _make(setting, BatchedFLRun, "helios", compression="topk",
+                 comp_frac=0.05)
+    topk.run_sync(2, eval_every=0)
+    assert dense.uplink_bytes() / topk.uplink_bytes() >= 10.0
+
+
+def test_lossy_ring_smaller_than_fp32(setting):
+    cfg, train, test, parts = setting
+    seq = _make(setting, FLRun, "afo")
+    fp = AG.SnapshotRing(seq.global_params, 64, 8)
+    for mode in ("quant", "delta"):
+        lossy = AG.SnapshotRing(seq.global_params, 64, 8, mode=mode,
+                                bits=8, fresh_window=2)
+        assert lossy.nbytes() < fp.nbytes() / 2, mode
+        # slot 0 decodes within the quantization bound at seed
+        base = lossy.read(0, stale=99)
+        err = _diff(base, seq.global_params)
+        assert err < 0.05, (mode, err)
+        # ...and exactly through the fresh row inside the window
+        assert _diff(lossy.read(0, stale=0), seq.global_params) == 0.0
+
+
+def test_error_store_grows_with_participation_not_population(setting):
+    run = _make(setting, BatchedFLRun, "helios", compression="topk",
+                participation=2)
+    run.run_sync(3, eval_every=0)
+    touched = run._err_store.touched()
+    seen = {i for cohort in run.cohort_log for i in cohort}
+    assert touched == len({run.clients[i].cid for i in seen})
+    assert touched <= 6 < len(run.clients) + 1
+    assert run._err_store.nbytes() > 0
+
+
+def test_bad_mode_and_fresh_window_rejected(setting):
+    with pytest.raises(ValueError):
+        _make(setting, FLRun, "helios", compression="gzip")
+    with pytest.raises(ValueError):
+        _make(setting, FLRun, "helios", compression="quant", comp_fresh=0)
+
+
+# ---------------------------------------------------------------------------
+# contracts: no stray host syncs, compile budgets still hold
+# ---------------------------------------------------------------------------
+
+
+def test_compressed_engines_pass_contracts(setting):
+    """Batched sync + bucketed async under REPRO_CONTRACTS: the error-row
+    gather/scatter is an EXPECTED transfer, everything else stays on
+    device, and the per-shape compile budget still holds (the codec adds
+    no retraces)."""
+    with CT.override(True):
+        bat = _make(setting, BatchedFLRun, "helios", compression="delta",
+                    participation=4)
+        bat.run_sync(3, eval_every=0)
+        CT.check_compile_budget(bat, tag="test.compressed.batched")
+        buc = _make(setting, AsyncFLRun, "afo", compression="quant",
+                    comp_fresh=2)
+        buc.run_async(8, eval_every=0, snapshot_cap=16)
+        CT.check_compile_budget(buc, tag="test.compressed.bucketed")
+    assert all(v == 1 for v in buc.bucket_programs().values()), \
+        buc.bucket_programs()
