@@ -20,11 +20,12 @@ import numpy as np
 
 from repro.analysis import contracts as CT
 from repro.configs import CNNS, HeliosConfig, reduced
+from repro.core import theory
 from repro.data.federated import (partition_iid, partition_noniid,
                                   partition_noniid_lazy)
 from repro.data.synthetic import class_gaussian_images
-from repro.federated import (AsyncFLRun, BatchedFLRun, FLRun, make_fleet,
-                             setup_clients)
+from repro.federated import (SCHEMES, AsyncFLRun, BatchedFLRun, FLRun,
+                             make_fleet, make_scheme, setup_clients)
 
 ROWS = []
 
@@ -66,10 +67,12 @@ def _run_scheme(world, scheme, n_capable, n_straggler, rounds, lr=0.02,
                 {"images": imgs, "labels": labels},
                 {"images": ti, "labels": tl},
                 local_steps=2, lr=lr, seed=seed)
-    if scheme in ("syn", "helios", "st_only", "random"):
-        hist = run.run_sync(rounds)
-    else:
+    # the Scheme object is the one authority on sync-vs-event execution
+    # (the old inline name list here silently ran new sync schemes async)
+    if make_scheme(scheme).async_native:
         hist = run.run_async(rounds)
+    else:
+        hist = run.run_sync(rounds)
     return hist
 
 
@@ -172,6 +175,103 @@ def table_ps_ablation(model="lenet", rounds=10):
         hist = _run_scheme(world, "helios", 2, 2, rounds, hcfg=hcfg)
         emit(f"ablation/p_s={p_s}", hist[-1]["time"] / rounds * 1e6,
              f"acc={hist[-1]['acc']:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# scheme gauntlet: every registered scheme under ONE heterogeneous world
+# ---------------------------------------------------------------------------
+
+
+def _prop2_report(straggler):
+    """Prop. 2 numbers for one straggler's CURRENT contribution scores:
+    the Wangni sampling distribution at its adapted volume, the Eq. 6
+    variance inflation that distribution pays, and the Eq. 9 expected-
+    sparsity bound — the theory column of the gauntlet (what soft
+    training costs in gradient variance at the volume it settled on)."""
+    g = jnp.concatenate(
+        [jnp.asarray(v, jnp.float32).ravel()
+         for v in jax.tree.leaves(straggler.helios_state["scores"])])
+    n = int(g.shape[0])
+    v = max(1, int(float(straggler.volume) * n))
+    p = theory.wangni_probabilities(g, v)
+    lhs, rhs = theory.check_convergence_condition(g, v, rho=0.5)
+    return {"score_units": n, "volume": float(straggler.volume),
+            "top_v": v,
+            "variance_inflation": float(theory.variance_inflation(g, p)),
+            "expected_sparsity": float(lhs), "eq9_bound": float(rhs),
+            "eq9_holds": bool(float(lhs) <= float(rhs) + 1e-6)}
+
+
+def table_scheme_gauntlet(model="lenet", rounds=12, nc=4, ns=4, seed=0,
+                          out_path="BENCH_scheme_gauntlet.json"):
+    """Every scheme in federated.schemes.SCHEMES — paper ablations AND the
+    published straggler baselines (SCAFFOLD / FLuID / delayed-gradient) —
+    under the IDENTICAL heterogeneous world: same non-IID partition, same
+    half-straggler fleet, same seed.  Per scheme: the accuracy trajectory
+    against SIMULATED wall-clock (each scheme's own round clock — syn
+    waits for stragglers, delayed does not), total uplink bytes
+    (scaffold's control variates ride dense at 2x), and for the
+    soft-training schemes the Prop. 2 variance-inflation report at the
+    straggler volumes the run settled on.  The JSON is the
+    accuracy-vs-time-vs-uplink frontier the README table reads from.
+
+    Engine per the scheme's own flag: async_native schemes run the
+    bucketed event engine, everything else the batched sync engine.
+    """
+    import json
+
+    cfg, imgs, labels, ti, tl, parts = _world(model, nc + ns, noniid=True,
+                                              seed=seed)
+    train = {"images": imgs, "labels": labels}
+    test = {"images": ti, "labels": tl}
+    results = {}
+    for scheme in SCHEMES:
+        sch = make_scheme(scheme)
+        hcfg = HeliosConfig()
+        clients = setup_clients(make_fleet(nc, ns), parts, hcfg)
+        cls = AsyncFLRun if sch.async_native else BatchedFLRun
+        run = cls(cfg, hcfg, scheme, clients, train, test,
+                  local_steps=2, lr=0.02, seed=seed)
+        if sch.async_native:
+            # same capable-cycle budget convention as _run_scheme
+            hist = run.run_async(rounds)
+        else:
+            hist = run.run_sync(rounds)
+        rec = {
+            "engine": cls.__name__,
+            "final_acc": hist[-1]["acc"],
+            "sim_time": hist[-1]["time"],
+            "uplink_mb": run.uplink_bytes() / 1e6,
+            "trajectory": [{"time": round(h["time"], 4),
+                            "acc": round(h["acc"], 4)} for h in hist],
+        }
+        if sch.soft_training:
+            strag = next(c for c in run.clients if c.is_straggler)
+            rec["prop2"] = _prop2_report(strag)
+        results[scheme] = rec
+        extra = ""
+        if "prop2" in rec:
+            extra = (f";var_inflation={rec['prop2']['variance_inflation']:.3f}"
+                     f";eq9={'ok' if rec['prop2']['eq9_holds'] else 'FAIL'}")
+        emit(f"scheme_gauntlet/{model}/{scheme}",
+             rec["sim_time"] / max(hist[-1]["cycle"], 1) * 1e6,
+             f"acc={rec['final_acc']:.3f};simtime={rec['sim_time']:.2f};"
+             f"uplink_mb={rec['uplink_mb']:.2f}" + extra)
+    with open(out_path, "w") as f:
+        json.dump({"model": model, "rounds": rounds,
+                   "fleet": {"capable": nc, "stragglers": ns},
+                   "partition": "noniid", "seed": seed,
+                   "local_steps": 2, "lr": 0.02,
+                   "schemes": results,
+                   "note": ("one world, every scheme: accuracy is at equal "
+                            "ROUNDS; compare at equal sim_time for the "
+                            "wall-clock frontier (each scheme's round "
+                            "clock differs by design) and against "
+                            "uplink_mb for the communication frontier; "
+                            "prop2 rows price soft-training's gradient "
+                            "variance (Eq. 6/9) at the settled volumes")},
+                  f, indent=2)
+    print(f"wrote {out_path}")
 
 
 # ---------------------------------------------------------------------------
@@ -834,6 +934,7 @@ TABLES = {
     "fig6": table_aggregation_opt,
     "fig7": table_noniid,
     "ablation": table_ps_ablation,
+    "scheme_gauntlet": table_scheme_gauntlet,
     "batched": table_batched_rounds,
     "federated_lm": table_federated_lm,
     "sharded_population": table_sharded_population,
@@ -860,6 +961,8 @@ def main() -> None:
             fn(models=("lenet",), rounds=6)
         elif args.quick and name in ("speedup", "fig6", "fig7"):
             fn(rounds=6)
+        elif args.quick and name == "scheme_gauntlet":
+            fn(rounds=3)
         elif args.quick and name == "batched":
             fn(counts=(16, 64), rounds=2)
         elif args.quick and name == "federated_lm":

@@ -464,6 +464,22 @@ class SnapshotRing:
             out.append(dec.astype(fL.dtype))
         return jax.tree.unflatten(tdef, out)
 
+    def put(self, agg: int, params) -> int:
+        """Store ``params`` as snapshot ``agg`` from the host loop — the
+        sync delayed-gradient scheme's per-round write (the async engines
+        write inside their bucket programs instead).  Allocation recycles
+        the oldest unanchored slot, so with no retains a ``cap``-slot ring
+        holds exactly the last ``cap`` puts.  fp32 mode only: the sync
+        ring is small (delay+1 rows) and read exactly, so there is no
+        lossy leg to mirror."""
+        if self.mode != "fp32":
+            raise ValueError(
+                f"SnapshotRing.put requires mode='fp32', got {self.mode!r}")
+        s = self.alloc.alloc(agg)
+        self.params = jax.tree.map(lambda r, x: r.at[s].set(x),
+                                   self.params, params)
+        return s
+
     def nbytes(self) -> int:
         """Device bytes the anchor store holds — the memory axis the
         lossy modes exist to shrink (recorded by the bench)."""

@@ -101,6 +101,11 @@ def select_masks(scores: Dict[str, jax.Array],
     explicit key argument make this directly vmap-able over a stacked client
     cohort (federated.runtime.BatchedFLRun vmaps the whole cycle).
 
+    ``p_s`` interpolates the draw: 0.0 is pure random rotation (the Caldas
+    baseline), 1.0 is pure score top-k (k_top == k_total, no random tail) —
+    which is exactly FLuID's invariant-dropout selection, so the ``fluid``
+    scheme reuses this function unchanged (federated.schemes._fluid_hcfg).
+
     ``block`` > 0 runs Eq. 2 at BLOCK granularity (beyond-paper, for the
     Pallas kernels): unit scores are mean-pooled per block, forced flags
     any-pooled, the top-k/random/forced draw picks ~P·(n/block) blocks, and

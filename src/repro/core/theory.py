@@ -1,7 +1,8 @@
 """Proposition-2 utilities: gradient-variance bound of soft-training.
 
-# repro: noqa[R6] — tests-only today: analysis utilities for Prop. 2,
-not on any production path (tracked in ROADMAP.md).
+Consumed by the scheme-gauntlet bench (benchmarks/run.py), which prices
+every soft-training scheme's gradient variance at its settled straggler
+volumes, and by the hypothesis property tests.
 
 Soft-training's sampled gradient is the importance-sampling estimator
 ST(g)_i = D_i g_i / p_i (Eq. 5); its second moment is sum_i g_i^2 / p_i

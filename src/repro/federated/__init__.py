@@ -7,9 +7,11 @@ from repro.federated.heterogeneity import (CAPABLE, TABLE_I, cycle_time,
                                            make_fleet)
 from repro.federated.runtime import (AsyncFLRun, BatchedFLRun, Client, FLRun,
                                      ShardedFLRun, setup_clients)
+from repro.federated.schemes import SCHEMES, Scheme, make_scheme
 
 __all__ = ["FLRun", "AsyncFLRun", "BatchedFLRun", "ShardedFLRun", "Client",
            "setup_clients", "make_fleet",
+           "Scheme", "SCHEMES", "make_scheme",
            "cycle_time", "SimClock", "Event", "TABLE_I", "CAPABLE",
            "ArrivalProcess", "JitteredArrival", "DropoutProcess",
            "BernoulliDropout",

@@ -205,7 +205,9 @@ def make_adapter(cfg: ModelConfig, kernels: str = "reference",
         return CNNAdapter(cfg, kernels, mask_block)
     if cfg.family in TOKEN_FAMILIES:
         return TokenLMAdapter(cfg, kernels, mask_block)
+    supported = ("cnn",) + TOKEN_FAMILIES
     raise NotImplementedError(
-        f"no FamilyAdapter for family {cfg.family!r}: encdec/vlm need extra "
-        "input streams (enc_embeds / image_embeds) — subclass FamilyAdapter "
-        "with a sample_batch that supplies them and register it here")
+        f"no FamilyAdapter for family {cfg.family!r} (supported families: "
+        f"{supported}): encdec/vlm need extra input streams (enc_embeds / "
+        "image_embeds) — subclass FamilyAdapter with a sample_batch that "
+        "supplies them and register it here")

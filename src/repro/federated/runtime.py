@@ -1,21 +1,20 @@
-"""Federated round engines: Helios + the paper's four baselines (§VII.A).
+"""Federated round engines: execution strategies for any Scheme.
 
-  helios   — soft-training stragglers, synchronous aggregation (this paper)
-  syn      — Synchronized FL: everyone trains the full model, wait for all
-  asyn     — Asynchronous FL: updates mixed in on arrival, no waiting
-  afo      — Asynchronous Federated Optimization (Xie et al. [6]):
-             staleness-discounted mixing
-  random   — Caldas et al. [12]: random sub-model of the expected volume
-             each cycle (no contribution top-k, no rotation regulation)
-  st_only  — Helios soft-training WITHOUT the Eq. 10 aggregation
-             optimization (the §VII.C ablation)
+The ALGORITHM lives behind the pluggable policy seam in
+:mod:`repro.federated.schemes` — the paper's helios / syn / st_only /
+random / asyn / afo plus the published straggler baselines scaffold /
+fluid / delayed.  This module owns EXECUTION only: an engine never
+compares scheme strings (tests/test_schemes.py asserts that), it reads
+the resolved ``self._scheme`` policy object's flags and hooks.
 
 Time is simulated (federated.events / heterogeneity.cycle_time); the metric
-is real (models train on real arrays).  The engines are FAMILY-BLIND:
-everything that varies by model family lives behind
-federated.adapter.FamilyAdapter, so the same engines federate the CNN
-testbed and the token-stream LM families.  Train/test data are dicts of
-aligned arrays keyed like the model's batch, indexed along axis 0.
+is real (models train on real arrays).  The engines are FAMILY-BLIND and
+SCHEME-BLIND: everything that varies by model family lives behind
+federated.adapter.FamilyAdapter and everything that varies by algorithm
+behind federated.schemes.Scheme, so the same engines federate the CNN
+testbed and the token-stream LM families under any registered scheme.
+Train/test data are dicts of aligned arrays keyed like the model's batch,
+indexed along axis 0.
 
 The engine matrix (one execution strategy per row, same semantics per
 column):
@@ -66,17 +65,44 @@ from repro.federated.adapter import FamilyAdapter, make_adapter
 from repro.federated.events import (ArrivalProcess, DropoutProcess, Event,
                                     SimClock)
 from repro.federated.heterogeneity import cycle_time
+from repro.federated.schemes import Scheme, make_scheme
 from repro.launch.mesh import make_client_mesh
 from repro.models import init_params
 from repro.optim import apply_updates, compression as CP, make_optimizer
 
 
-def _make_local_train(adapter: FamilyAdapter, opt):
+def _make_local_train(adapter: FamilyAdapter, opt, with_correction=False):
     """E masked local SGD steps under lax.scan — the one training loop all
     engines share (sequential jits it directly; batched/async engines vmap
     it per cohort/bucket, which keeps the engines numerically in
     lock-step).  ``batches`` is a dict pytree whose leaves carry a leading
-    (local_steps,) axis."""
+    (local_steps,) axis.
+
+    ``with_correction`` (SCAFFOLD schemes) adds a fixed per-client
+    gradient correction ``corr = c_global - c_i`` to every step — a
+    fourth argument, built only when the scheme asks so every other
+    scheme's program signature is byte-identical to the pre-seam one."""
+
+    if with_correction:
+        def local_train_corr(params, batches, masks, corr):
+            opt_state = opt.init(params)
+
+            def step(carry, batch):
+                p, s = carry
+
+                def loss_fn(pp):
+                    return adapter.loss_fn(pp, batch, masks)
+
+                loss, grads = jax.value_and_grad(loss_fn)(p)
+                grads = jax.tree.map(lambda g, c: g + c, grads, corr)
+                updates, s = opt.update(grads, s, p, 0)
+                return (apply_updates(p, updates), s), loss
+
+            (params, _), losses = jax.lax.scan(step, (params, opt_state),
+                                               batches)
+            return params, losses.mean()
+
+        return local_train_corr
 
     def local_train(params, batches, masks):
         opt_state = opt.init(params)
@@ -95,13 +121,6 @@ def _make_local_train(adapter: FamilyAdapter, opt):
         return params, losses.mean()
 
     return local_train
-
-
-def _random_hcfg(hcfg: HeliosConfig) -> HeliosConfig:
-    """Caldas et al. [12] baseline: pure random selection, no top-k /
-    rotation.  Shared by all engines so the baseline stays one definition."""
-    return dataclasses.replace(hcfg, p_s=0.0, rotation_threshold_auto=False,
-                               rotation_threshold=10 ** 9)
 
 
 def _median_pace(capable_times: Sequence[float]) -> float:
@@ -189,8 +208,17 @@ class FLRun:
     #: aggregation steps decode from the int ring rows; fresher ones read
     #: a small rotating full-precision buffer (exact)
     comp_fresh: int = 8
+    #: DGC-style compression warmup: the first ``comp_warmup`` SYNC rounds
+    #: upload dense (bit-identical to ``compression="none"``) before the
+    #: lossy codec kicks in — closes the documented topk/delta early-round
+    #: convergence gap.  Counts global ``self.round``s; the async event
+    #: loops have no round index and always compress.
+    comp_warmup: int = 0
 
     def __post_init__(self):
+        #: the resolved algorithm policy — every scheme decision in the
+        #: engines reads this object (never the raw string again)
+        self._scheme: Scheme = make_scheme(self.scheme)
         self.mask_block = self.mask_block or self.hcfg.mask_block or 128
         self.adapter = make_adapter(self.cfg, self.kernels, self.mask_block)
         self.api = self.adapter.api
@@ -213,17 +241,24 @@ class FLRun:
         if self.comp_fresh < 1:
             raise ValueError("comp_fresh must be >= 1 (the ring keeps at "
                              "least the newest anchor full-precision)")
+        if self.comp_warmup < 0:
+            raise ValueError("comp_warmup must be >= 0")
         self._comp_total, self._comp_leaves = \
             CP.param_census(self.global_params)
         #: uplink accounting: updates is a host int, coords a DEVICE scalar
         #: accumulated eagerly (no host sync in the hot loops; converted
-        #: once in :meth:`uplink_bytes`)
+        #: once in :meth:`uplink_bytes`).  dense_updates counts the
+        #: warmup-round updates that bypassed the codec; extra_updates the
+        #: scheme's dense side-channel (SCAFFOLD control deltas).
         self.uplink_updates = 0
+        self.uplink_dense_updates = 0
+        self.uplink_extra_updates = 0
         self.uplink_coords = jnp.float32(0.0)
         if self.compression != "none":
             self._err_store = CP.HostErrorStore(self.global_params)
         self._init_helios()
         self._jit()
+        self._scheme.init_run(self)
 
     # ------------------------------------------------------------------
     def _init_helios(self):
@@ -232,7 +267,8 @@ class FLRun:
                                            volume=c.volume, seed=c.cid)
 
     def _jit(self):
-        self._local_train = jax.jit(_make_local_train(self.adapter, self.opt))
+        self._local_train = jax.jit(_make_local_train(
+            self.adapter, self.opt, self._scheme.uses_control))
         self._eval_chunk = jax.jit(self.adapter.eval_chunk)
         if self.compression != "none":
             mode, frac, bits = self.compression, self.comp_frac, \
@@ -267,13 +303,26 @@ class FLRun:
         Syncs ``uplink_coords`` once — call from benches/tests, never a
         hot loop.  ``none`` moves every param dense-f32 per update; the
         lossy formulas live in :func:`repro.optim.compression.uplink_bytes`.
+        Warmup-round updates and scheme side-channels (SCAFFOLD control
+        deltas) are billed dense.
         """
+        dense = float(self.uplink_extra_updates) * self._comp_total * 4.0
         if self.compression == "none":
-            return float(self.uplink_updates) * self._comp_total * 4.0
+            return dense + float(self.uplink_updates) * self._comp_total * 4.0
         coords = float(self.uplink_coords)          # repro: noqa[R3]
-        return CP.uplink_bytes(self.compression, coords, self._comp_total,
-                               self._comp_leaves * self.uplink_updates,
-                               self.comp_bits)
+        comp_updates = self.uplink_updates - self.uplink_dense_updates
+        return (dense
+                + float(self.uplink_dense_updates) * self._comp_total * 4.0
+                + CP.uplink_bytes(self.compression, coords, self._comp_total,
+                                  self._comp_leaves * comp_updates,
+                                  self.comp_bits))
+
+    def _comp_active(self) -> bool:
+        """Whether THIS sync round's uplink goes through the lossy codec
+        (False during the first ``comp_warmup`` rounds — those run the
+        exact same program a ``compression="none"`` run compiles, so the
+        warmup prefix is bit-identical to an uncompressed run)."""
+        return self.compression != "none" and self.round >= self.comp_warmup
 
     def _get_cached_program(self, key, builder):
         """LRU of compiled programs; elastic churn (or per-draw cohort /
@@ -296,43 +345,69 @@ class FLRun:
                                          self.batch_size)
 
     def _client_masks(self, client: Client) -> dict:
-        if self.scheme in ("helios", "st_only", "random") and client.is_straggler:
+        if self._scheme.soft_training and client.is_straggler:
             return client.helios_state["masks"]
         return ST.full_masks(self.adapter.schema)
 
     def _client_cycle(self, client: Client, base_params):
         """One local training cycle; returns (new_params, masks, ratio)."""
-        hcfg = self.hcfg
-        if self.scheme == "random" and client.is_straggler:
-            hcfg = _random_hcfg(self.hcfg)
-        if self.scheme in ("helios", "st_only", "random") and client.is_straggler:
+        sch = self._scheme
+        soft = sch.soft_training and client.is_straggler
+        hcfg = sch.effective_hcfg(self.hcfg)
+        if soft:
             client.helios_state = ST.begin_cycle(client.helios_state, hcfg)
         masks = self._client_masks(client)
         batches = self._sample_batches(client)
-        new_params, loss = self._local_train(base_params, batches, masks)
-        if self.scheme in ("helios", "st_only") and client.is_straggler:
-            scores = self.adapter.cycle_scores(new_params, base_params)
+        if sch.uses_control:
+            corr = jax.tree.map(lambda cg, ci: cg - jnp.asarray(ci),
+                                self._c_global,
+                                self._ctrl_store.row(client.cid))
+            new_params, loss = self._local_train(base_params, batches,
+                                                 masks, corr)
+            # option-II control update from the RAW trained params (before
+            # any uplink codec): dc = (x - y)/(K*lr) - c_global
+            inv = 1.0 / (self.local_steps * self.lr)
+            dc = jax.tree.map(
+                lambda b, y, cg: (b.astype(jnp.float32)
+                                  - y.astype(jnp.float32)) * inv - cg,
+                base_params, new_params, self._c_global)
+            self._ctrl_store.set_row(
+                client.cid,
+                jax.tree.map(lambda ci, d: jnp.asarray(ci, jnp.float32) + d,
+                             self._ctrl_store.row(client.cid), dc))
+            self._dc_buf.append(dc)
+        else:
+            new_params, loss = self._local_train(base_params, batches, masks)
+        if soft:
+            if sch.use_delta_scores:
+                scores = self.adapter.cycle_scores(new_params, base_params)
+            else:                                          # random [12]
+                scores = client.helios_state["scores"]
             client.helios_state = ST.end_cycle(client.helios_state, scores,
-                                               self.hcfg)
-        elif self.scheme == "random" and client.is_straggler:
-            client.helios_state = ST.end_cycle(
-                client.helios_state,
-                client.helios_state["scores"], hcfg)
+                                               hcfg)
         # device scalars on purpose: the hot loops never sync on these —
         # they are converted behind the eval gate (_record_round / history)
         ratio = MK.selected_fraction(masks)
         return new_params, masks, ratio, loss
 
+    def _apply_control(self) -> None:
+        """Fold buffered client control deltas into the server control —
+        after the cohort in sync rounds (all clients corrected by the
+        round-start c_global, the SCAFFOLD parallel semantics), after each
+        event in the async fallback."""
+        if not self._dc_buf:
+            return
+        n = float(len(self.clients))
+        for dc in self._dc_buf:
+            self._c_global = jax.tree.map(lambda c, d: c + d / n,
+                                          self._c_global, dc)
+        self._dc_buf = []
+
     def _aggregate(self, results):
         """results: list of (params, masks, ratio)."""
         params = [r[0] for r in results]
         ratios = [r[2] for r in results]
-        if self.scheme == "helios":
-            mode = self.hcfg.aggregation
-        elif self.scheme in ("st_only", "random"):
-            mode = "uniform"
-        else:
-            mode = "uniform"
+        mode = self._scheme.agg_mode(self.hcfg)
         if mode == "masked_mean":
             pmasks = [self.adapter.expand_masks(r[1], self.global_params)
                       for r in results]
@@ -380,12 +455,12 @@ class FLRun:
         if self.sampler == "uniform":
             p = None
         elif self.sampler == "time_weighted":
-            # mirror _round_times exactly: syn trains everyone at full
-            # volume, so its weights must not see the soft-training volumes
-            t = np.asarray([cycle_time(c.profile,
-                                       c.volume if (self.scheme != "syn" and
-                                                    c.is_straggler) else 1.0)
-                            for c in self.clients])
+            # the weights ARE _round_times over the fleet — one expression,
+            # one scheme hook (Scheme.effective_volume), so the sampler and
+            # the round clock can never disagree on what a straggler costs
+            # (the pre-seam code duplicated the volume conditional here and
+            # relied on keeping the two copies mirrored by hand)
+            t = np.asarray(self._round_times())
             w = 1.0 / np.maximum(t, 1e-9)
             p = w / w.sum()
         else:
@@ -395,10 +470,10 @@ class FLRun:
 
     def _round_times(self, clients: Optional[Sequence["Client"]] = None) \
             -> List[float]:
-        """Simulated wall time per client for one round (current volumes)."""
-        return [cycle_time(c.profile,
-                           c.volume if (self.scheme != "syn" and
-                                        c.is_straggler) else 1.0)
+        """Simulated wall time per client for one round, billed at the
+        scheme's effective volume (full-model schemes never see the
+        soft-training volumes)."""
+        return [cycle_time(c.profile, self._scheme.effective_volume(c))
                 for c in (self.clients if clients is None else clients)]
 
     def _record_round(self, r: int, rounds: int, eval_every: int,
@@ -417,16 +492,17 @@ class FLRun:
                 "volumes": [c.volume for c in self.clients]})
 
     def run_sync(self, rounds: int, eval_every: int = 1) -> List[dict]:
-        """helios / st_only / random / syn — the ONE sync host loop.
+        """The ONE sync host loop (every scheme with async_native=False).
 
         Template method: every engine runs this exact per-round protocol
-        (draw cohort -> §IV.C pace -> simulated times -> engine-specific
-        ``_train_cohort`` -> volume adaptation -> clock/record) and only
-        overrides the hooks.  Each round trains only the drawn cohort
-        (everyone under full participation); unsampled clients keep their
-        Helios state untouched.  The pace is computed over the sampled
-        cohort — at full participation it equals the whole-fleet pace, so
-        sampling off reproduces the original trajectory exactly.
+        (draw cohort -> §IV.C pace -> simulated times -> scheme round_start
+        -> engine-specific ``_train_cohort`` -> volume adaptation -> scheme
+        round_end -> clock/record) and only overrides the hooks.  Each
+        round trains only the drawn cohort (everyone under full
+        participation); unsampled clients keep their Helios state
+        untouched.  The pace is computed over the sampled cohort — at full
+        participation it equals the whole-fleet pace, so sampling off
+        reproduces the original trajectory exactly.
         """
         clock = 0.0
         for r in range(rounds):
@@ -435,14 +511,20 @@ class FLRun:
             cclients = [self.clients[i] for i in cohort]
             pace = _collab_pace(cclients)
             times = self._round_times(cclients)
+            self._scheme.round_start(self)
             # contract: the round's device work never syncs to host —
             # losses/ratios stay device values until _record_round's gate
             with CT.no_host_transfers("run_sync[" + self.scheme + "]"):
                 losses, ratios = self._train_cohort(cohort, cclients)
             self.uplink_updates += len(cohort)
+            if self.compression != "none" and not self._comp_active():
+                self.uplink_dense_updates += len(cohort)    # warmup rounds
+            self.uplink_extra_updates += \
+                len(cohort) * self._scheme.extra_dense_uplink
             CT.assert_finite(self.global_params, tag="run_sync.global_params")
             self._adapt_volumes(cohort, cclients, times, pace)
-            clock += max(times)
+            self._scheme.round_end(self)
+            clock += self._scheme.round_duration(times, cclients)
             self.round += 1
             self._record_round(r, rounds, eval_every, clock, losses, ratios)
         self._finish_sync()
@@ -462,9 +544,29 @@ class FLRun:
         The sequential reference: one re-dispatched ``_local_train`` per
         client, consuming ``self.rng`` in cohort order (the draw order
         every other engine replays)."""
-        results = [self._client_cycle(c, self.global_params)
-                   for c in cclients]
-        if self.compression != "none":
+        sch = self._scheme
+        results = []
+        for c in cclients:
+            stale = sch.uses_stale_base and c.is_straggler
+            base = self._stale_base if stale else self.global_params
+            r = self._client_cycle(c, base)
+            if stale:
+                # delayed-gradient hybrid: virtualize the stale-base update
+                # onto the CURRENT global with the staleness discount, so
+                # it rides the normal aggregation (and the uplink codec
+                # compresses p_virtual - global like any other delta)
+                disc = self._stale_disc
+                p = jax.tree.map(
+                    lambda g, y, b: (g.astype(jnp.float32)
+                                     + disc * (y.astype(jnp.float32)
+                                               - b.astype(jnp.float32))
+                                     ).astype(g.dtype),
+                    self.global_params, r[0], base)
+                r = (p,) + r[1:]
+            results.append(r)
+        if sch.uses_control:
+            self._apply_control()
+        if self._comp_active():
             results = self._compress_results(cclients, results)
         self._aggregate(results)
         return [x[3] for x in results], [x[2] for x in results]
@@ -491,7 +593,7 @@ class FLRun:
         """Volume adaptation toward the collaboration pace (§IV.C) — host
         arithmetic shared verbatim by every engine; only the state
         write-back (``_write_volumes``) is engine-specific."""
-        if self.scheme != "helios" or not self.hcfg.adapt_volume:
+        if not (self._scheme.adapt_volume and self.hcfg.adapt_volume):
             return
         upd = [j for j, c in enumerate(cclients) if c.is_straggler]
         for j in upd:
@@ -587,10 +689,11 @@ class FLRun:
                     self._err_store.set_row(c.cid, new_err)
                     self.uplink_coords = self.uplink_coords + coords
                 self.uplink_updates += 1
-                w = mix_weight
-                if self.scheme == "afo":
-                    w = mix_weight * AG.staleness_weight(stale, staleness_a)
+                self.uplink_extra_updates += self._scheme.extra_dense_uplink
+                w = self._scheme.async_weight(mix_weight, stale, staleness_a)
                 self.global_params = AG.mix(self.global_params, new_params, w)
+                if self._scheme.uses_control:
+                    self._apply_control()      # per event: async semantics
             agg_counter += 1
             snapshots[agg_counter] = self.global_params
             c.staleness_anchor = agg_counter
@@ -713,7 +816,7 @@ class AsyncFLRun(FLRun):
         adapter, opt = self.adapter, self.opt
         ones_masks = ST.full_masks(adapter.schema)
         local_train = _make_local_train(adapter, opt)
-        afo = self.scheme == "afo"
+        discount = self._scheme.staleness_discount
         comp, frac, bits = self.compression, self.comp_frac, self.comp_bits
         ring_mode = self._ring_mode()
 
@@ -727,7 +830,7 @@ class AsyncFLRun(FLRun):
                     lambda bp, b: local_train(bp, b, ones_masks))(base,
                                                                   batches)
                 w = jnp.full((bpad,), 1.0, jnp.float32) * mix_w
-                if afo:
+                if discount:
                     w = w * AG.staleness_weights(stale, stale_a)
                 w = w * valid
                 new_global, new_ring = AG.mix_bucket_ring(
@@ -762,7 +865,7 @@ class AsyncFLRun(FLRun):
                 lambda b, s: (b.astype(jnp.float32) + s).astype(b.dtype),
                 base, sent)
             w = jnp.full((bpad,), 1.0, jnp.float32) * mix_w
-            if afo:
+            if discount:
                 w = w * AG.staleness_weights(stale, stale_a)
             w = w * valid
             coords_sum = jnp.sum(coords * valid)
@@ -802,9 +905,10 @@ class AsyncFLRun(FLRun):
     def run_async(self, capable_cycles: int, mix_weight: float = 0.5,
                   staleness_a: float = 0.5, eval_every: int = 1,
                   snapshot_cap: int = 64) -> List[dict]:
-        if self.scheme not in ("asyn", "afo"):
-            # soft-training schemes need per-event mask selection and
-            # helios_state evolution — only the sequential reference
+        if not self._scheme.async_native:
+            # non-native schemes (soft-training mask evolution, control
+            # variates, stale bases) need per-event state the bucket
+            # program does not carry — only the sequential reference
             # implements that event-by-event; the bucket program trains
             # full models (the asyn/afo semantics)
             return super().run_async(capable_cycles, mix_weight,
@@ -991,11 +1095,17 @@ class BatchedFLRun(AsyncFLRun):
 
     # ------------------------------------------------------------------
     def _get_round_fn(self, n_s: int, n_c: int):
+        # the warmup phase is part of the program identity: warmup rounds
+        # run the EXACT program a compression="none" run compiles (so the
+        # prefix is bit-identical), steady rounds the codec program — at
+        # most one extra cache entry, each still holding one program
+        on = self._comp_active()
         return self._get_cached_program(
-            (n_s, n_c), lambda: jax.jit(self._make_round_fn(n_s, n_c)))
+            (n_s, n_c, on), lambda: jax.jit(self._make_round_fn(n_s, n_c,
+                                                                on)))
 
     def _build_batched(self):
-        soft = self.scheme in ("helios", "st_only", "random")
+        soft = self._scheme.soft_training
         self._s_idx = [i for i, c in enumerate(self.clients)
                        if soft and c.is_straggler]
         self._c_idx = [i for i, c in enumerate(self.clients)
@@ -1017,17 +1127,29 @@ class BatchedFLRun(AsyncFLRun):
         self._round_fn = self._get_round_fn(len(self._s_idx),
                                             len(self._c_idx))
 
-    def _make_round_fn(self, n_s: int, n_c: int):
+    def _make_round_fn(self, n_s: int, n_c: int, comp_on: bool = True):
         adapter, opt = self.adapter, self.opt
-        hcfg, scheme = self.hcfg, self.scheme
-        hcfg_eff = _random_hcfg(hcfg) if scheme == "random" else hcfg
-        agg_mode = hcfg.aggregation if scheme == "helios" else "uniform"
+        scheme, hcfg = self._scheme, self.hcfg
+        hcfg_eff = scheme.effective_hcfg(hcfg)
+        agg_mode = scheme.agg_mode(hcfg)
         ones_masks = ST.full_masks(adapter.schema)
-        local_train = _make_local_train(adapter, opt)
-        comp, frac, bits = self.compression, self.comp_frac, self.comp_bits
+        local_train = _make_local_train(adapter, opt, scheme.uses_control)
+        comp = self.compression if comp_on else "none"
+        frac, bits = self.comp_frac, self.comp_bits
+        inv = 1.0 / (self.local_steps * self.lr)
 
         def round_fn(global_params, sstate, s_batch, c_batch, unperm,
-                     err=None):
+                     *extras):
+            # scheme extras ride positionally, in flag order (the host
+            # _round_extras builds the mirror-image tuple)
+            extras = list(extras)
+            if scheme.uses_control:
+                c_global, c_rows = extras.pop(0), extras.pop(0)
+            if scheme.uses_stale_base:
+                stale_base = extras.pop(0)
+                stale_flags, discs = extras.pop(0), extras.pop(0)
+            err = extras.pop(0) if comp != "none" else None
+
             def cat(parts):
                 if len(parts) == 1:
                     return jax.tree.map(
@@ -1043,11 +1165,11 @@ class BatchedFLRun(AsyncFLRun):
                     st = ST.begin_cycle(st, hcfg_eff)
                     masks = st["masks"]
                     p, loss = local_train(global_params, batches, masks)
-                    if scheme in ("helios", "st_only"):
+                    if scheme.use_delta_scores:
                         scores = adapter.cycle_scores(p, global_params)
-                        st = ST.end_cycle(st, scores, hcfg)
                     else:                                  # random [12]
-                        st = ST.end_cycle(st, st["scores"], hcfg_eff)
+                        scores = st["scores"]
+                    st = ST.end_cycle(st, scores, hcfg_eff)
                     return (p, st, MK.selected_fraction(masks), loss, masks)
 
                 p, new_sstate, r, l, m = jax.vmap(one_straggler)(
@@ -1055,10 +1177,40 @@ class BatchedFLRun(AsyncFLRun):
                 parts_p.append(p), parts_r.append(r), parts_l.append(l)
                 parts_m.append(m)
             if n_c:
-                def one_capable(batches):
-                    return local_train(global_params, batches, ones_masks)
+                if scheme.uses_control:
+                    corr = jax.tree.map(lambda cg, cr: cg - cr,
+                                        c_global, c_rows)
 
-                p, l = jax.vmap(one_capable)(c_batch)
+                    def one_capable(batches, co):
+                        return local_train(global_params, batches,
+                                           ones_masks, co)
+
+                    p, l = jax.vmap(one_capable)(c_batch, corr)
+                elif scheme.uses_stale_base:
+                    def one_capable(batches, flag, disc):
+                        base = jax.tree.map(
+                            lambda s, g: jnp.where(flag > 0,
+                                                   s.astype(g.dtype), g),
+                            stale_base, global_params)
+                        p, loss = local_train(base, batches, ones_masks)
+                        # virtualize onto the current global (capable rows:
+                        # base == global, disc == 1 => exactly p)
+                        p = jax.tree.map(
+                            lambda g, y, b: (g.astype(jnp.float32) + disc
+                                             * (y.astype(jnp.float32)
+                                                - b.astype(jnp.float32))
+                                             ).astype(g.dtype),
+                            global_params, p, base)
+                        return p, loss
+
+                    p, l = jax.vmap(one_capable)(c_batch, stale_flags,
+                                                 discs)
+                else:
+                    def one_capable(batches):
+                        return local_train(global_params, batches,
+                                           ones_masks)
+
+                    p, l = jax.vmap(one_capable)(c_batch)
                 parts_p.append(p)
                 parts_r.append(jnp.ones((n_c,), jnp.float32))
                 parts_l.append(l)
@@ -1068,13 +1220,24 @@ class BatchedFLRun(AsyncFLRun):
             stacked = cat(parts_p)
             ratios = cat(parts_r)
             losses = cat(parts_l)
+            ctrl_out = ()
+            if scheme.uses_control:
+                # option-II control update from the RAW trained rows,
+                # before any codec touches them
+                dc = jax.tree.map(
+                    lambda g, t, cg: (g.astype(jnp.float32)
+                                      - t.astype(jnp.float32)) * inv - cg,
+                    global_params, stacked, c_global)
+                new_c_rows = jax.tree.map(lambda rr, d: rr + d, c_rows, dc)
+                dc_sum = jax.tree.map(lambda d: jnp.sum(d, axis=0), dc)
+                ctrl_out = (new_c_rows, dc_sum)
             if comp == "none":
                 pmasks = adapter.expand_masks_batch(cat(parts_m),
                                                     global_params) \
                     if agg_mode == "masked_mean" else None
                 new_global = AG.aggregate_stacked(agg_mode, global_params,
                                                   stacked, ratios, pmasks)
-                return new_global, new_sstate, ratios, losses
+                return (new_global, new_sstate, ratios, losses) + ctrl_out
             # compressed uplink: every stacked update goes through the
             # codec + error feedback, masked so Eq. 2-frozen coordinates
             # are never encoded (capable rows carry ones masks)
@@ -1092,7 +1255,7 @@ class BatchedFLRun(AsyncFLRun):
             new_global = AG.aggregate_stacked(agg_mode, global_params,
                                               stacked, ratios, pmasks)
             return (new_global, new_sstate, ratios, losses, new_err,
-                    jnp.sum(coords))
+                    jnp.sum(coords)) + ctrl_out
 
         return round_fn
 
@@ -1111,24 +1274,57 @@ class BatchedFLRun(AsyncFLRun):
         return stack(self._s_idx), stack(self._c_idx)
 
     # -- template hooks -------------------------------------------------
+    def _round_extras(self, row_clients: List[Client]):
+        """Scheme-specific traced inputs, in the order the round program
+        pops them (mirrors _make_round_fn).  Rows follow the program's
+        stacked row order — the full-model schemes that use extras have no
+        soft cohort, so that is exactly ``row_clients`` order."""
+        extras = ()
+        if self._scheme.uses_control:
+            extras += (self._c_global, self._ctrl_store.gather(
+                [c.cid for c in row_clients]))
+        if self._scheme.uses_stale_base:
+            flags = jnp.asarray([1.0 if c.is_straggler else 0.0
+                                 for c in row_clients], jnp.float32)
+            discs = jnp.asarray([self._stale_disc if c.is_straggler else 1.0
+                                 for c in row_clients], jnp.float32)
+            extras += (self._stale_base, flags, discs)
+        return extras
+
+    def _apply_round_outs(self, row_clients: List[Client], outs) -> None:
+        """Write back the round program's trailing scheme outputs
+        (SCAFFOLD: per-client control rows + the server control fold)."""
+        if self._scheme.uses_control:
+            new_c_rows, dc_sum = outs
+            self._ctrl_store.scatter([c.cid for c in row_clients],
+                                     new_c_rows)
+            n = float(len(self.clients))
+            self._c_global = jax.tree.map(lambda c, d: c + d / n,
+                                          self._c_global, dc_sum)
+
     def _train_cohort(self, cohort: List[int], cclients: List[Client]):
         if self.participation:
             return self._train_cohort_sampled(cohort, cclients)
         s_batch, c_batch = self._sample_cohort_batches()
-        if self.compression == "none":
-            self.global_params, self._sstate, ratios, losses = \
-                self._round_fn(self.global_params, self._sstate,
-                               s_batch, c_batch, self._unperm)
+        round_fn = self._get_round_fn(len(self._s_idx), len(self._c_idx))
+        extras = self._round_extras(self.clients)
+        if not self._comp_active():
+            outs = round_fn(self.global_params, self._sstate,
+                            s_batch, c_batch, self._unperm, *extras)
+            self.global_params, self._sstate, ratios, losses = outs[:4]
+            self._apply_round_outs(self.clients, outs[4:])
             return losses, ratios
         # stacked rows are in original client order (cat() un-permutes),
         # so the error rows gather/scatter in that same order
         cids = [c.cid for c in self.clients]
         err = self._err_store.gather(cids)
+        outs = round_fn(self.global_params, self._sstate,
+                        s_batch, c_batch, self._unperm, *extras, err)
         (self.global_params, self._sstate, ratios, losses, new_err,
-         coords) = self._round_fn(self.global_params, self._sstate,
-                                  s_batch, c_batch, self._unperm, err)
+         coords) = outs[:6]
         self.uplink_coords = self.uplink_coords + coords
         self._err_store.scatter(cids, new_err)
+        self._apply_round_outs(self.clients, outs[6:])
         # device arrays on purpose — _record_round converts behind the gate
         return losses, ratios
 
@@ -1143,7 +1339,7 @@ class BatchedFLRun(AsyncFLRun):
         consume ``self.rng`` in cohort order — the same order as the
         sequential engine's loop — so trajectories stay replay-equivalent.
         """
-        soft = self.scheme in ("helios", "st_only", "random")
+        soft = self._scheme.soft_training
         s_pos = [j for j, c in enumerate(cclients)
                  if soft and c.is_straggler]
         c_pos = [j for j, c in enumerate(cclients)
@@ -1161,18 +1357,22 @@ class BatchedFLRun(AsyncFLRun):
         sstate = ST.stack_states([cclients[j].helios_state
                                   for j in s_pos]) if s_pos else None
         round_fn = self._get_round_fn(len(s_pos), len(c_pos))
-        if self.compression == "none":
-            self.global_params, sstate, ratios, losses = round_fn(
-                self.global_params, sstate, stack(s_pos), stack(c_pos),
-                unperm)
+        extras = self._round_extras(cclients)
+        if not self._comp_active():
+            outs = round_fn(self.global_params, sstate, stack(s_pos),
+                            stack(c_pos), unperm, *extras)
+            self.global_params, sstate, ratios, losses = outs[:4]
+            self._apply_round_outs(cclients, outs[4:])
         else:
             cids = [c.cid for c in cclients]
             err = self._err_store.gather(cids)
+            outs = round_fn(self.global_params, sstate, stack(s_pos),
+                            stack(c_pos), unperm, *extras, err)
             (self.global_params, sstate, ratios, losses, new_err,
-             coords) = round_fn(self.global_params, sstate, stack(s_pos),
-                                stack(c_pos), unperm, err)
+             coords) = outs[:6]
             self.uplink_coords = self.uplink_coords + coords
             self._err_store.scatter(cids, new_err)
+            self._apply_round_outs(cclients, outs[6:])
         if s_pos:
             for j, st in zip(s_pos, ST.unstack_states(sstate, len(s_pos))):
                 cclients[j].helios_state = st
@@ -1195,10 +1395,10 @@ class BatchedFLRun(AsyncFLRun):
 
     # ------------------------------------------------------------------
     def run_async(self, *args, **kwargs) -> List[dict]:
-        if self.scheme in ("asyn", "afo"):
+        if self._scheme.async_native:
             return super().run_async(*args, **kwargs)      # bucketed engine
-        # soft schemes delegate to the sequential event loop (via the
-        # AsyncFLRun guard), which mutates per-client helios_state:
+        # non-native schemes delegate to the sequential event loop (via
+        # the AsyncFLRun guard), which mutates per-client helios_state:
         # materialize it from the stacked/population state, run, restack
         self.sync_client_states()
         hist = super().run_async(*args, **kwargs)
@@ -1294,9 +1494,17 @@ class ShardedFLRun(BatchedFLRun):
             # before the client list changed — restack them
             self._pop_state = ST.host_states(ST.stack_states(
                 [c.helios_state for c in self.clients]))
-        self._round_fn = self._get_cached_program(
-            ("sharded", self._kpad),
-            lambda: self._make_sharded_round_fn(self._kpad))
+        # warm the cache; the attribute stays for monitoring
+        # (benchmarks read run._round_fn._cache_size())
+        self._round_fn = self._get_sharded_fn()
+
+    def _get_sharded_fn(self):
+        # same warmup-phase cache split as _get_round_fn: one program per
+        # (kpad, codec-on/off) signature
+        on = self._comp_active()
+        return self._get_cached_program(
+            ("sharded", self._kpad, on),
+            lambda: self._make_sharded_round_fn(self._kpad, on))
 
     def sync_client_states(self) -> None:
         """Materialize per-client ``helios_state`` views from the population
@@ -1310,30 +1518,58 @@ class ShardedFLRun(BatchedFLRun):
         return jax.tree.map(lambda x: jnp.asarray(x[i]), self._pop_state)
 
     # ------------------------------------------------------------------
-    def _make_sharded_round_fn(self, kpad: int):
+    def _make_sharded_round_fn(self, kpad: int, comp_on: bool = True):
         adapter, opt = self.adapter, self.opt
-        hcfg, scheme = self.hcfg, self.scheme
-        hcfg_eff = _random_hcfg(hcfg) if scheme == "random" else hcfg
-        hcfg_end = hcfg_eff if scheme == "random" else hcfg
-        agg_mode = hcfg.aggregation if scheme == "helios" else "uniform"
+        scheme, hcfg = self._scheme, self.hcfg
+        hcfg_eff = scheme.effective_hcfg(hcfg)
+        agg_mode = scheme.agg_mode(hcfg)
         ones_masks = ST.full_masks(adapter.schema)
-        local_train = _make_local_train(adapter, opt)
-        comp, frac, bits = self.compression, self.comp_frac, self.comp_bits
+        local_train = _make_local_train(adapter, opt, scheme.uses_control)
+        comp = self.compression if comp_on else "none"
+        frac, bits = self.comp_frac, self.comp_bits
+        inv = 1.0 / (self.local_steps * self.lr)
 
         def round_body(global_params, cstate, batches, is_soft, valid,
-                       err=None):
+                       *extras):
+            extras = list(extras)
+            if scheme.uses_control:
+                c_global, c_rows = extras.pop(0), extras.pop(0)
+                corr = jax.tree.map(lambda cg, cr: cg - cr, c_global,
+                                    c_rows)
+            if scheme.uses_stale_base:
+                stale_base = extras.pop(0)
+                stale_flags, discs = extras.pop(0), extras.pop(0)
+            err = extras.pop(0) if comp != "none" else None
+
             # block-local views: leading axis = kpad / n_devices rows
-            def one_client(st, b, soft_flag):
+            def one_client(st, b, soft_flag, *row):
                 st_b = ST.begin_cycle(st, hcfg_eff)
                 masks = jax.tree.map(
                     lambda m, o: jnp.where(soft_flag > 0, m, o),
                     st_b["masks"], ones_masks)
-                p, loss = local_train(global_params, b, masks)
-                if scheme in ("helios", "st_only"):
+                if scheme.uses_control:
+                    co, = row
+                    p, loss = local_train(global_params, b, masks, co)
+                elif scheme.uses_stale_base:
+                    flag, disc = row
+                    base = jax.tree.map(
+                        lambda s, g: jnp.where(flag > 0, s.astype(g.dtype),
+                                               g),
+                        stale_base, global_params)
+                    p, loss = local_train(base, b, masks)
+                    p = jax.tree.map(
+                        lambda g, y, bb: (g.astype(jnp.float32) + disc
+                                          * (y.astype(jnp.float32)
+                                             - bb.astype(jnp.float32))
+                                          ).astype(g.dtype),
+                        global_params, p, base)
+                else:
+                    p, loss = local_train(global_params, b, masks)
+                if scheme.use_delta_scores:
                     scores = adapter.cycle_scores(p, global_params)
                 else:                                      # random [12] / syn
                     scores = st_b["scores"]
-                st_e = ST.end_cycle(st_b, scores, hcfg_end)
+                st_e = ST.end_cycle(st_b, scores, hcfg_eff)
                 # capable (and padding) slots keep their state bit-identical:
                 # the discarded begin/end cycle never leaks back
                 new_st = jax.tree.map(
@@ -1342,8 +1578,28 @@ class ShardedFLRun(BatchedFLRun):
                                   MK.selected_fraction(st_b["masks"]), 1.0)
                 return p, new_st, ratio, loss, masks
 
+            row_extra = ()
+            if scheme.uses_control:
+                row_extra = (corr,)
+            elif scheme.uses_stale_base:
+                row_extra = (stale_flags, discs)
             p, new_state, ratios, losses, masks = jax.vmap(one_client)(
-                cstate, batches, is_soft)
+                cstate, batches, is_soft, *row_extra)
+            ctrl_out = ()
+            if scheme.uses_control:
+                # option-II control update from the RAW trained rows;
+                # padding rows are masked out of the server fold by valid
+                dc = jax.tree.map(
+                    lambda g, t, cg: (g.astype(jnp.float32)
+                                      - t.astype(jnp.float32)) * inv - cg,
+                    global_params, p, c_global)
+                new_c_rows = jax.tree.map(lambda rr, d: rr + d, c_rows, dc)
+                dc_sum = jax.tree.map(
+                    lambda d: jax.lax.psum(
+                        jnp.sum(d * valid.reshape((-1,) + (1,)
+                                                  * (d.ndim - 1)), axis=0),
+                        "clients"), dc)
+                ctrl_out = (new_c_rows, dc_sum)
             pm = adapter.expand_masks_batch(masks, global_params) \
                 if (comp != "none" or agg_mode == "masked_mean") else None
             if comp != "none":
@@ -1387,8 +1643,9 @@ class ShardedFLRun(BatchedFLRun):
                 new_g = jax.tree.map(lambda g, t: t.astype(g.dtype),
                                      global_params, part)
             if comp != "none":
-                return new_g, new_state, ratios, losses, new_err, coords
-            return new_g, new_state, ratios, losses
+                return (new_g, new_state, ratios, losses, new_err,
+                        coords) + ctrl_out
+            return (new_g, new_state, ratios, losses) + ctrl_out
 
         # check_rep=False: remat checkpoint_name (transformer stacks) has no
         # replication rule on current JAX; the psum above still leaves
@@ -1396,17 +1653,60 @@ class ShardedFLRun(BatchedFLRun):
         in_specs = (P(), P("clients"), P("clients"), P("clients"),
                     P("clients"))
         out_specs = (P(), P("clients"), P("clients"), P("clients"))
+        if scheme.uses_control:
+            in_specs += (P(), P("clients"))                # c_global, rows
+        if scheme.uses_stale_base:
+            in_specs += (P(), P("clients"), P("clients"))  # base/flags/disc
         if comp != "none":
             in_specs += (P("clients"),)                    # err rows
             out_specs += (P("clients"), P())               # new_err, coords
+        if scheme.uses_control:
+            out_specs += (P("clients"), P())               # new rows, dc_sum
         sharded = shard_map(
             round_body, mesh=self._mesh,
             in_specs=in_specs, out_specs=out_specs, check_rep=False)
         return jax.jit(sharded)
 
     # -- template hooks -------------------------------------------------
+    def _round_extras(self, row_clients: List[Client]):
+        """Sharded extras are PADDED to the program's kpad slots: padding
+        replicates the first client's control row (its dc contribution is
+        masked out by ``valid`` in-program) and trains from the fresh
+        global at discount 1.  Dense trees are pinned mesh-replicated
+        every round (idempotent device_put, same reason as the globals in
+        _build_batched): after round 1 they are built FROM mesh-sharded
+        round outputs, and letting the input sharding drift would retrace
+        the round program against its compile budget."""
+        rep = jax.sharding.NamedSharding(self._mesh, P())
+        pad = self._kpad - len(row_clients)
+        extras = ()
+        if self._scheme.uses_control:
+            cids = [c.cid for c in row_clients]
+            extras += (jax.device_put(self._c_global, rep),
+                       self._ctrl_store.gather(cids + [cids[0]] * pad))
+        if self._scheme.uses_stale_base:
+            flags = jnp.asarray(
+                [1.0 if c.is_straggler else 0.0 for c in row_clients]
+                + [0.0] * pad, jnp.float32)
+            discs = jnp.asarray(
+                [self._stale_disc if c.is_straggler else 1.0
+                 for c in row_clients] + [1.0] * pad, jnp.float32)
+            extras += (jax.device_put(self._stale_base, rep), flags, discs)
+        return extras
+
+    def _apply_round_outs(self, row_clients: List[Client], outs) -> None:
+        if self._scheme.uses_control:
+            new_c_rows, dc_sum = outs
+            k = len(row_clients)
+            self._ctrl_store.scatter(
+                [c.cid for c in row_clients],
+                jax.tree.map(lambda x: x[:k], new_c_rows))
+            n = float(len(self.clients))
+            self._c_global = jax.tree.map(lambda c, d: c + d / n,
+                                          self._c_global, dc_sum)
+
     def _train_cohort(self, cohort: List[int], cclients: List[Client]):
-        soft = self.scheme in ("helios", "st_only", "random")
+        soft = self._scheme.soft_training
         k, kpad = len(cohort), self._kpad
         idx = np.asarray(cohort + [cohort[0]] * (kpad - k))
         is_soft = jnp.asarray(
@@ -1417,19 +1717,25 @@ class ShardedFLRun(BatchedFLRun):
             self.rng, self.train_data, [c.data_idx for c in cclients],
             self.local_steps, self.batch_size, pad_to=kpad)
         cstate = ST.gather_states_host(self._pop_state, idx)
-        if self.compression == "none":
-            self.global_params, new_cstate, ratios, losses = self._round_fn(
-                self.global_params, cstate, batches, is_soft, valid)
+        round_fn = self._get_sharded_fn()
+        extras = self._round_extras(cclients)
+        if not self._comp_active():
+            outs = round_fn(self.global_params, cstate, batches, is_soft,
+                            valid, *extras)
+            self.global_params, new_cstate, ratios, losses = outs[:4]
+            self._apply_round_outs(cclients, outs[4:])
         else:
             err = self._err_store.gather(
                 [self.clients[i].cid for i in idx])
+            outs = round_fn(self.global_params, cstate, batches, is_soft,
+                            valid, *extras, err)
             (self.global_params, new_cstate, ratios, losses, new_err,
-             coords) = self._round_fn(self.global_params, cstate, batches,
-                                      is_soft, valid, err)
+             coords) = outs[:6]
             self.uplink_coords = self.uplink_coords + coords
             self._err_store.scatter(
                 [self.clients[i].cid for i in cohort],
                 jax.tree.map(lambda x: x[:k], new_err))
+            self._apply_round_outs(cclients, outs[6:])
         ST.scatter_states_host(
             self._pop_state, cohort,
             jax.tree.map(lambda x: x[:k], new_cstate))

@@ -1,0 +1,296 @@
+"""Pluggable per-scheme update policies — the algorithm seam.
+
+The engines in :mod:`repro.federated.runtime` know HOW to execute a round
+(sequentially, batched under one vmap, shard_mapped over a client mesh, or
+event-driven in buckets); a :class:`Scheme` says WHAT a round means for one
+algorithm: which clients soft-train, which HeliosConfig they see, how the
+server aggregates, how a straggler's simulated volume enters the cohort
+sampler and the round clock, and any extra per-round state (control
+variates, stale-base snapshots).  It is the same move
+:class:`repro.federated.adapter.FamilyAdapter` made for model families —
+the engines stay scheme-blind, so every scheme runs unchanged on all four
+engines and the cross-engine equivalence walls pin them together.
+
+Paper schemes (Helios §VII.A ablations)::
+
+  helios   — soft-training stragglers + Eq. 10 aggregation (this paper)
+  syn      — Synchronized FL: everyone trains the full model, wait for all
+  asyn     — Asynchronous FL: updates mixed on arrival, no waiting
+  afo      — Asynchronous Federated Optimization: staleness-discounted mix
+  random   — Caldas et al. [12]: random sub-model, no top-k / rotation
+  st_only  — soft-training WITHOUT the Eq. 10 optimization (§VII.C)
+
+Published straggler baselines (PAPERS.md), for the head-to-head gauntlet::
+
+  scaffold — SCAFFOLD control variates (Karimireddy et al.): every client
+             trains the FULL model with its gradient corrected by
+             c_global - c_i; straggler drift is attacked with variance
+             reduction instead of sub-models, at 2x uplink (the control
+             delta rides along dense).
+  fluid    — FLuID invariant dropout (Wang et al.): stragglers train a
+             sub-model chosen by pure update-magnitude top-k ("invariant"
+             neurons stay frozen) — exactly Eq. 2 masking at p_s = 1.0
+             with rotation regulation disabled — and the server patches
+             sub-updates in with masked-mean aggregation.
+  delayed  — delayed-gradient hybrid (Xu et al.): stragglers train the
+             FULL model from a D-round-stale global snapshot; their
+             updates are staleness-discounted and folded into the normal
+             synchronous aggregation, so the round clock is set by the
+             capable cohort alone.
+
+Adding a scheme: subclass :class:`Scheme`, set the class flags, override
+the hooks you need, and register the class in :data:`SCHEMES`.  The
+engines consult ONLY this interface — grep runtime.py for ``_scheme`` to
+see every touch point (and tests/test_schemes.py asserts no inline
+scheme-string comparison ever reappears there).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HeliosConfig
+from repro.core import aggregation as AG
+from repro.optim import compression as CP
+
+
+def _random_hcfg(hcfg: HeliosConfig) -> HeliosConfig:
+    """Caldas et al. [12] baseline: pure random selection, no top-k /
+    rotation.  Shared by all engines so the baseline stays one definition."""
+    return dataclasses.replace(hcfg, p_s=0.0, rotation_threshold_auto=False,
+                               rotation_threshold=10 ** 9)
+
+
+def _fluid_hcfg(hcfg: HeliosConfig) -> HeliosConfig:
+    """FLuID invariant dropout as an Eq. 2 special case: p_s = 1.0 makes
+    selection pure top-k on the invariance scores (k_top == k_total in
+    core.selection.select_masks) and an unreachable rotation threshold
+    keeps invariant neurons frozen (FLuID has no rotation regulation)."""
+    return dataclasses.replace(hcfg, p_s=1.0, rotation_threshold_auto=False,
+                               rotation_threshold=10 ** 9)
+
+
+class Scheme:
+    """One federated algorithm's policy surface.
+
+    Class flags are STATIC (read at trace/build time, so they can gate
+    traced code without runtime branching); hooks run on the host per
+    round/client.  The base class is the common synchronous full-model
+    policy; subclasses flip flags and override hooks.
+    """
+
+    name = "base"
+    #: stragglers run Eq. 2 mask selection + helios_state evolution
+    soft_training = False
+    #: native event-driven scheme (bucketed async engine); everything else
+    #: runs the synchronous template (run_async falls back to the
+    #: sequential event reference)
+    async_native = False
+    #: asynchronously mixed updates are discounted by (staleness+1)^-a
+    staleness_discount = False
+    #: §IV.C volume adaptation moves straggler volumes toward the pace
+    adapt_volume = False
+    #: cycle scores come from the local update delta (False = reuse the
+    #: previous scores, the random baseline's no-op)
+    use_delta_scores = True
+    #: SCAFFOLD-style control variates: local training is corrected by
+    #: c_global - c_i and the engines thread control rows through the
+    #: round programs
+    uses_control = False
+    #: delayed-gradient hybrid: stragglers train from a stale snapshot and
+    #: their update is virtualized onto the current global
+    uses_stale_base = False
+    #: simulated cycle cost: stragglers work at full volume (no sub-model)
+    full_volume = False
+    #: extra dense fp32 pytrees uploaded per update (control deltas)
+    extra_dense_uplink = 0
+
+    # -- per-round policy ----------------------------------------------
+    def effective_hcfg(self, hcfg: HeliosConfig) -> HeliosConfig:
+        """The HeliosConfig soft-training actually sees (one definition
+        for begin_cycle AND end_cycle, every engine)."""
+        return hcfg
+
+    def agg_mode(self, hcfg: HeliosConfig) -> str:
+        """Server aggregation mode (core.aggregation)."""
+        return "uniform"
+
+    def effective_volume(self, client) -> float:
+        """The volume a client's simulated cycle time is billed at — the
+        ONE definition both the time_weighted cohort sampler and
+        _round_times consult (the pre-seam code duplicated this
+        expression and relied on keeping the copies mirrored by hand)."""
+        if self.full_volume or not client.is_straggler:
+            return 1.0
+        return client.volume
+
+    def round_duration(self, times, cclients) -> float:
+        """Simulated wall-clock one synchronous round costs (the critical
+        path over the cohort)."""
+        return max(times)
+
+    def async_weight(self, mix_weight: float, stale: int,
+                     staleness_a: float) -> float:
+        """Per-event mix weight in the sequential async reference."""
+        if self.staleness_discount:
+            return mix_weight * AG.staleness_weight(stale, staleness_a)
+        return mix_weight
+
+    # -- extra per-run state (control variates, snapshot rings) ---------
+    def init_run(self, run) -> None:
+        """Attach scheme-owned state to a freshly constructed run."""
+
+    def round_start(self, run) -> None:
+        """Host hook before a sync round's cohort trains."""
+
+    def round_end(self, run) -> None:
+        """Host hook after a sync round aggregated."""
+
+
+class HeliosScheme(Scheme):
+    name = "helios"
+    soft_training = True
+    adapt_volume = True
+
+    def agg_mode(self, hcfg):
+        return hcfg.aggregation
+
+
+class StOnlyScheme(Scheme):
+    """Helios soft-training WITHOUT Eq. 10 aggregation (§VII.C)."""
+    name = "st_only"
+    soft_training = True
+
+
+class RandomScheme(Scheme):
+    """Caldas et al. [12]: random sub-model of the expected volume."""
+    name = "random"
+    soft_training = True
+    use_delta_scores = False
+
+    def effective_hcfg(self, hcfg):
+        return _random_hcfg(hcfg)
+
+
+class SynScheme(Scheme):
+    """Synchronized FL: full models, wait for the slowest."""
+    name = "syn"
+    full_volume = True
+
+
+class AsynScheme(Scheme):
+    """Asynchronous FL: constant-weight mixing on arrival."""
+    name = "asyn"
+    async_native = True
+
+
+class AfoScheme(Scheme):
+    """Asynchronous Federated Optimization: staleness-discounted mixing."""
+    name = "afo"
+    async_native = True
+    staleness_discount = True
+
+
+class ScaffoldScheme(Scheme):
+    """SCAFFOLD control variates (option II, the practical variant).
+
+    Every client trains the FULL model; the local gradient is corrected
+    by ``c_global - c_i`` each step, and after K local steps the client's
+    control updates as ``c_i+ = c_i - c_global + (x - y) / (K * lr)``
+    (the average update direction it just applied).  The server folds
+    ``c_global += sum(dc) / N`` once per round.  Client controls live in
+    a lazily-materialized :class:`repro.optim.compression.HostErrorStore`
+    (zero rows ARE the correct SCAFFOLD init), so a million-client
+    population only pays for clients that trained.  Control deltas ride
+    the uplink dense (``extra_dense_uplink`` — the scheme's documented
+    2x communication cost); the param delta still goes through the
+    uplink codec.
+    """
+    name = "scaffold"
+    full_volume = True
+    uses_control = True
+    extra_dense_uplink = 1
+
+    def init_run(self, run) -> None:
+        run._c_global = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), run.global_params)
+        run._ctrl_store = CP.HostErrorStore(run.global_params)
+        run._dc_buf = []
+
+
+class FluidScheme(Scheme):
+    """FLuID invariant dropout: Eq. 2 masking at p_s = 1.0 (pure
+    update-magnitude top-k, rotation disabled) + masked-mean patching."""
+    name = "fluid"
+    soft_training = True
+    adapt_volume = True
+
+    def effective_hcfg(self, hcfg):
+        return _fluid_hcfg(hcfg)
+
+    def agg_mode(self, hcfg):
+        return "masked_mean"
+
+
+class DelayedScheme(Scheme):
+    """Delayed-gradient hybrid: stragglers train the FULL model from a
+    ``delay``-round-stale global (a host-driven fp32
+    :class:`repro.core.aggregation.SnapshotRing`), and their update is
+    virtualized onto the fresh global with a staleness discount::
+
+        p_virtual = global + (stale+1)^-a * (y - base)
+
+    so it rides the normal uniform aggregation.  Capable rows have
+    ``base == global`` and discount 1, i.e. exactly their trained params.
+    Stragglers never gate the round clock (:meth:`round_duration` is the
+    capable-cohort critical path) — that is the scheme's entire wall-clock
+    win in the gauntlet.
+    """
+    name = "delayed"
+    full_volume = True
+    uses_stale_base = True
+    staleness_discount = True          # async fallback mixes like afo
+    #: stragglers read the global from this many rounds back
+    delay = 2
+    staleness_a = 0.5
+
+    def init_run(self, run) -> None:
+        run._delay_ring = AG.SnapshotRing(run.global_params,
+                                          cap=self.delay + 1, n_anchors=0)
+
+    def round_start(self, run) -> None:
+        agg = max(0, run.round - self.delay)
+        run._stale_base = run._delay_ring.read(agg)
+        run._stale_disc = float(AG.staleness_weight(
+            min(run.round, self.delay), self.staleness_a))
+
+    def round_end(self, run) -> None:
+        run._delay_ring.put(run.round + 1, run.global_params)
+
+    def round_duration(self, times, cclients) -> float:
+        capable = [t for t, c in zip(times, cclients) if not c.is_straggler]
+        return max(capable) if capable else max(times)
+
+
+#: registry, in gauntlet display order
+SCHEMES: Dict[str, Type[Scheme]] = {
+    cls.name: cls for cls in (
+        HeliosScheme, SynScheme, StOnlyScheme, RandomScheme,
+        AsynScheme, AfoScheme,
+        ScaffoldScheme, FluidScheme, DelayedScheme,
+    )
+}
+
+
+def make_scheme(name: str) -> Scheme:
+    """Resolve a scheme name to its policy object (the engines call this
+    once in ``__post_init__``; everything downstream reads the object)."""
+    try:
+        return SCHEMES[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown scheme {name!r}: supported schemes are "
+            f"{tuple(SCHEMES)}") from None

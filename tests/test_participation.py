@@ -14,8 +14,8 @@ import pytest
 from repro.configs import CNNS, HeliosConfig, reduced
 from repro.data.federated import partition_iid, partition_iid_lazy
 from repro.data.synthetic import class_gaussian_images
-from repro.federated import (BatchedFLRun, FLRun, ShardedFLRun, make_fleet,
-                             setup_clients)
+from repro.federated import (AsyncFLRun, BatchedFLRun, FLRun, ShardedFLRun,
+                             make_fleet, setup_clients)
 
 
 @pytest.fixture(scope="module")
@@ -62,6 +62,30 @@ def test_identical_schedules_across_engines(setting, sampler):
                    for x, y in zip(jax.tree.leaves(a),
                                    jax.tree.leaves(other.global_params)))
         assert diff < 1e-5
+
+
+@pytest.mark.parametrize("scheme", ["scaffold", "fluid", "delayed"])
+def test_new_scheme_schedules_identical_across_engines(setting, scheme):
+    """The baseline schemes keep the schedule determinism guarantee on
+    ALL FOUR engines: time_weighted weights come from the scheme's ONE
+    effective_volume hook, so full-volume baselines (scaffold/delayed)
+    and soft-training ones (fluid) each draw the exact same cohorts —
+    and the sampled trajectories stay one trajectory."""
+    runs = [_make(setting, cls, scheme=scheme, participation=3,
+                  sampler="time_weighted")
+            for cls in (FLRun, AsyncFLRun, BatchedFLRun, ShardedFLRun)]
+    for r in runs:
+        r.run_sync(4, eval_every=0)
+    for other in runs[1:]:
+        assert other.cohort_log == runs[0].cohort_log, type(other).__name__
+    assert len(runs[0].cohort_log) == 4
+    a = runs[0].global_params
+    for other in runs[1:]:
+        diff = max(float(np.max(np.abs(np.asarray(x, np.float32)
+                                       - np.asarray(y, np.float32))))
+                   for x, y in zip(jax.tree.leaves(a),
+                                   jax.tree.leaves(other.global_params)))
+        assert diff < 1e-5, type(other).__name__
 
 
 def test_skipped_client_state_bit_identical(setting):

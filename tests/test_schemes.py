@@ -1,0 +1,268 @@
+"""The scheme seam: published baselines on every engine, and the
+scheme-string drift fixes.
+
+Pins (a) each new baseline (SCAFFOLD control variates, FLuID invariant
+dropout, delayed-gradient hybrid) to ONE trajectory across the
+sequential, async-fallback, batched and sharded engines, (b) the seam
+itself — runtime.py contains NO inline scheme-string comparison, the
+time_weighted sampler and the round clock bill stragglers through the
+same Scheme.effective_volume hook so the two paths cannot disagree —
+and (c) the uplink/clock semantics each baseline claims (SCAFFOLD's 2x
+dense uplink, delayed's capable-only critical path), plus the compile
+budgets under contracts.
+"""
+import os
+
+if os.environ.get("REPRO_HOST_DEVICES") and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_HOST_DEVICES"])
+
+import dataclasses
+import re
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import contracts as CT
+from repro.configs import CNNS, HeliosConfig, reduced
+from repro.data.federated import partition_iid
+from repro.data.synthetic import class_gaussian_images
+from repro.federated import (SCHEMES, AsyncFLRun, BatchedFLRun, FLRun,
+                             ShardedFLRun, make_adapter, make_fleet,
+                             make_scheme, setup_clients)
+from repro.federated.heterogeneity import cycle_time
+
+NEW_SCHEMES = ("scaffold", "fluid", "delayed")
+ENGINES = (FLRun, AsyncFLRun, BatchedFLRun, ShardedFLRun)
+
+
+@pytest.fixture(scope="module")
+def setting():
+    cfg = reduced(CNNS["lenet"])
+    imgs, labels = class_gaussian_images(400, cfg.image_size,
+                                         cfg.in_channels, cfg.num_classes,
+                                         seed=0)
+    ti, tl = class_gaussian_images(64, cfg.image_size, cfg.in_channels,
+                                   cfg.num_classes, seed=9)
+    parts = partition_iid(len(labels), 8, seed=0)
+    return cfg, {"images": imgs, "labels": labels}, \
+        {"images": ti, "labels": tl}, parts
+
+
+def _make(setting, cls, scheme, **kw):
+    cfg, train, test, parts = setting
+    hcfg = HeliosConfig()
+    clients = setup_clients(make_fleet(4, 4), parts, hcfg)
+    return cls(cfg, hcfg, scheme, clients, train, test,
+               local_steps=1, batch_size=8, lr=0.1, seed=0, eval_batch=64,
+               **kw)
+
+
+def _diff(a, b):
+    return max(float(np.max(np.abs(np.asarray(x, np.float32)
+                                   - np.asarray(y, np.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# one trajectory per baseline across all four engines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", NEW_SCHEMES)
+def test_baseline_four_engine_wall(setting, scheme):
+    """scaffold / fluid / delayed reproduce one trajectory on the
+    sequential, async-fallback, batched and sharded engines, with
+    identical uplink accounting (the ISSUE's acceptance bar)."""
+    runs = []
+    for cls in ENGINES:
+        r = _make(setting, cls, scheme)
+        r.run_sync(3, eval_every=0)
+        runs.append(r)
+    seq = runs[0]
+    for other in runs[1:]:
+        assert _diff(seq.global_params, other.global_params) < 1e-5, \
+            type(other).__name__
+        assert other.uplink_updates == seq.uplink_updates
+        assert abs(other.uplink_bytes() - seq.uplink_bytes()) < 1e-3
+
+
+@pytest.mark.parametrize("scheme", NEW_SCHEMES)
+def test_baseline_sampled_wall(setting, scheme):
+    """Partial participation exercises the per-cohort control-row
+    gather/scatter (scaffold) and stale-base rows (delayed): same
+    schedule, same trajectory, seq <-> batched."""
+    seq = _make(setting, FLRun, scheme, participation=4)
+    seq.run_sync(3, eval_every=0)
+    bat = _make(setting, BatchedFLRun, scheme, participation=4)
+    bat.run_sync(3, eval_every=0)
+    assert seq.cohort_log == bat.cohort_log
+    assert _diff(seq.global_params, bat.global_params) < 1e-5
+
+
+def test_baselines_compose_with_compression(setting):
+    """A baseline scheme under the lossy uplink codec is still one
+    trajectory seq <-> batched (scaffold's control delta stays raw; only
+    the param delta rides the codec)."""
+    for scheme in ("scaffold", "delayed"):
+        seq = _make(setting, FLRun, scheme, compression="topk")
+        seq.run_sync(2, eval_every=0)
+        bat = _make(setting, BatchedFLRun, scheme, compression="topk")
+        bat.run_sync(2, eval_every=0)
+        assert _diff(seq.global_params, bat.global_params) < 1e-4, scheme
+        assert abs(seq.uplink_bytes() - bat.uplink_bytes()) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# the semantics each baseline claims
+# ---------------------------------------------------------------------------
+
+
+def test_scaffold_uplink_is_double_dense(setting):
+    """SCAFFOLD's control delta rides along dense: exactly 2x the uplink
+    of the plain synchronous baseline over the same cohort schedule."""
+    syn = _make(setting, BatchedFLRun, "syn")
+    syn.run_sync(2, eval_every=0)
+    sca = _make(setting, BatchedFLRun, "scaffold")
+    sca.run_sync(2, eval_every=0)
+    assert sca.uplink_updates == syn.uplink_updates
+    assert sca.uplink_bytes() == pytest.approx(2.0 * syn.uplink_bytes())
+
+
+def test_scaffold_controls_grow_with_participation(setting):
+    """Client controls live in a lazily-materialized host store: zero
+    rows are the correct init, and only sampled clients ever get one."""
+    run = _make(setting, BatchedFLRun, "scaffold", participation=3)
+    run.run_sync(3, eval_every=0)
+    seen = {run.clients[i].cid for c in run.cohort_log for i in c}
+    assert run._ctrl_store.touched() == len(seen) <= len(run.clients)
+    # c_global moved off its zero init once deltas folded in
+    assert max(float(np.max(np.abs(np.asarray(x))))
+               for x in jax.tree.leaves(run._c_global)) > 0.0
+
+
+def test_delayed_round_clock_is_capable_critical_path(setting):
+    """Delayed-gradient stragglers never gate the clock: the simulated
+    round duration is the capable cohort's critical path, strictly below
+    the synchronized scheme's wait-for-all over the same fleet."""
+    sch = make_scheme("delayed")
+    syn = make_scheme("syn")
+    clients = _make(setting, FLRun, "delayed").clients
+    times = [cycle_time(c.profile, 1.0) for c in clients]
+    d = sch.round_duration(times, clients)
+    s = syn.round_duration(times, clients)
+    capable = [t for t, c in zip(times, clients) if not c.is_straggler]
+    assert d == max(capable) < s == max(times)
+
+
+def test_delayed_stragglers_read_stale_base(setting):
+    """After D rounds the delayed scheme's stale base is the global from
+    D rounds back — not the fresh one."""
+    run = _make(setting, FLRun, "delayed")
+    run.run_sync(1, eval_every=0)
+    after_r0 = jax.tree.map(np.asarray, run.global_params)
+    # rounds 1-3; round 3's base is snapshot max(0, 3-2) = end of round 0
+    run.run_sync(3, eval_every=0)
+    assert _diff(run._stale_base, after_r0) == 0.0
+    assert _diff(run._stale_base, run.global_params) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# the drift fixes: one volume definition, no inline scheme strings
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_has_no_inline_scheme_comparisons():
+    """The seam is total: runtime.py never compares the scheme string.
+    Every behavioral fork goes through the Scheme object (this is the
+    regression test for the pre-seam sampler/clock drift bug, where the
+    time_weighted weights and the round clock each hard-coded their own
+    straggler-volume conditional and disagreed for full-volume
+    schemes)."""
+    import repro.federated.runtime as RT
+    src = open(RT.__file__).read()
+    assert not re.search(
+        r"\bscheme\s*(==|!=|\bin\b|not\s+in)", src), \
+        "inline scheme-string comparison reintroduced in runtime.py"
+
+
+def test_sampler_and_clock_share_volume_definition(setting):
+    """The two consumers of straggler volume — the time_weighted cohort
+    sampler and the simulated round clock — cannot disagree: replaying
+    the sampler from a cloned rng with weights built from
+    Scheme.effective_volume (the clock's definition) reproduces the
+    engine's drawn cohorts exactly, including across volume
+    adaptation."""
+    for scheme in ("helios", "scaffold"):      # adaptive and full-volume
+        run = _make(setting, FLRun, scheme, participation=3,
+                    sampler="time_weighted")
+        rng = np.random.default_rng((run.seed, 0x5EED))
+        sch = make_scheme(scheme)
+        for _ in range(4):
+            t = np.asarray([cycle_time(c.profile, sch.effective_volume(c))
+                            for c in run.clients])
+            w = 1.0 / np.maximum(t, 1e-9)
+            exp = sorted(int(i) for i in rng.choice(
+                len(run.clients), size=3, replace=False, p=w / w.sum()))
+            run.run_sync(1, eval_every=0)
+            assert run.cohort_log[-1] == exp, scheme
+
+
+def test_full_volume_schemes_bill_stragglers_at_one(setting):
+    """full_volume schemes (syn / scaffold / delayed) bill every client
+    at volume 1.0 regardless of the straggler flag; soft-training
+    schemes bill the straggler's adapted volume."""
+    run = _make(setting, FLRun, "helios")
+    strag = next(c for c in run.clients if c.is_straggler)
+    for name in ("syn", "scaffold", "delayed"):
+        assert make_scheme(name).effective_volume(strag) == 1.0
+    assert make_scheme("helios").effective_volume(strag) == strag.volume
+
+
+# ---------------------------------------------------------------------------
+# registry + error-message seams
+# ---------------------------------------------------------------------------
+
+
+def test_scheme_registry_complete():
+    assert set(SCHEMES) == {"helios", "syn", "st_only", "random",
+                            "asyn", "afo", "scaffold", "fluid", "delayed"}
+    for name, cls in SCHEMES.items():
+        assert cls.name == name
+        assert not (cls.async_native and cls.soft_training)
+
+
+def test_make_scheme_unknown_lists_supported():
+    with pytest.raises(ValueError, match="helios") as ei:
+        make_scheme("fedavg2")
+    assert "scaffold" in str(ei.value) and "fedavg2" in str(ei.value)
+
+
+def test_make_adapter_unsupported_family_names_both_sides(setting):
+    """The adapter dispatch error names the unsupported family AND the
+    supported ones, so a config typo reads as a one-line diagnosis."""
+    cfg = dataclasses.replace(setting[0], family="vlm")
+    with pytest.raises(NotImplementedError, match="'vlm'") as ei:
+        make_adapter(cfg)
+    msg = str(ei.value)
+    assert "cnn" in msg and "moe" in msg and "supported" in msg
+
+
+# ---------------------------------------------------------------------------
+# contracts: the new schemes keep the compile budgets
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", NEW_SCHEMES)
+def test_new_schemes_pass_contracts(setting, scheme):
+    """Batched + sharded under REPRO_CONTRACTS: control/stale-base rows
+    move host<->device only through expected transfers, and each cache
+    key still compiles exactly one program."""
+    with CT.override(True):
+        bat = _make(setting, BatchedFLRun, scheme, participation=4)
+        bat.run_sync(3, eval_every=0)
+        CT.check_compile_budget(bat, tag=f"test.{scheme}.batched")
+        sh = _make(setting, ShardedFLRun, scheme)
+        sh.run_sync(2, eval_every=0)
+        CT.check_compile_budget(sh, tag=f"test.{scheme}.sharded")
