@@ -1,0 +1,188 @@
+"""CI regression gate: fresh ``--quick`` bench JSONs vs committed ones.
+
+CI regenerates the quick benches, then runs::
+
+    PYTHONPATH=src python -m benchmarks.check_regression
+
+which loads each fresh ``BENCH_*.json`` next to its committed baseline
+(``git show <ref>:<name>``) and gates on the invariants that survive the
+quick/full scale gap — a quick run has fewer rounds than the committed
+full table, so raw accuracies are NOT comparable; ratios, censuses, and
+zero-counters are:
+
+* ``BENCH_observability.json`` — the disarmed recorder emitted ZERO
+  events on both sides (telemetry off is genuinely off); ``uplink_updates
+  == downlink_updates`` in the armed summary (every uplink answered by a
+  dense broadcast); ``overhead_frac`` below an absolute ceiling
+  (``--max-overhead``, default 0.5 — CI wall clocks are noisy, so this
+  catches blowups, not drift).  When the fresh and committed runs have
+  the SAME round count, the ``repro.obs diff`` tolerances
+  (final_metric 5%, sim/uplink/downlink 25%, scaled by ``--tol-scale``)
+  gate too; otherwise that diff is printed but informational.
+* ``BENCH_scheme_gauntlet.json`` — identical scheme set and per-scheme
+  engine as committed; scaffold's uplink is 2x syn's within 15% (the
+  control variates ride dense — the documented cost); every scheme moved
+  bytes in BOTH directions (uplink_mb > 0, downlink_mb > 0).
+* ``BENCH_contracts.json`` — every ``off``-mode counter is zero on both
+  sides (contracts off is free), and any check family the committed
+  ``on`` run exercised is still exercised fresh (check volume cannot
+  silently collapse).
+
+A baseline missing from the ref (a brand-new bench) or a fresh file not
+regenerated in this CI job is skipped with a note, never failed — the
+gate only compares what exists on both sides.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+from repro.obs import report
+
+FILES = ("BENCH_observability.json", "BENCH_scheme_gauntlet.json",
+         "BENCH_contracts.json")
+
+
+def committed_json(name: str, ref: str):
+    """The baseline as committed at ``ref`` (None if absent there)."""
+    out = subprocess.run(["git", "show", f"{ref}:{name}"],
+                         capture_output=True, text=True)
+    if out.returncode != 0:
+        return None
+    return json.loads(out.stdout)
+
+
+def _fail(problems, msg):
+    problems.append(msg)
+    print(f"  FAIL {msg}")
+
+
+def _ok(msg):
+    print(f"  ok   {msg}")
+
+
+def check_observability(fresh, base, problems, tol_scale, max_overhead):
+    for side, d in (("fresh", fresh), ("committed", base)):
+        ev = d["results"]["off"].get("events")
+        if ev == 0:
+            _ok(f"{side}: off-mode events == 0")
+        else:
+            _fail(problems, f"{side}: disarmed recorder buffered {ev} "
+                            "events (telemetry off must be off)")
+    counters = fresh.get("summary", {}).get("counters", {})
+    up, down = counters.get("uplink_updates"), \
+        counters.get("downlink_updates")
+    if up == down and up:
+        _ok(f"uplink_updates == downlink_updates == {up}")
+    else:
+        _fail(problems, f"uplink_updates={up} != downlink_updates={down}")
+    ov = fresh.get("overhead_frac", 0.0)
+    if ov <= max_overhead:
+        _ok(f"overhead_frac={ov:+.3f} <= {max_overhead}")
+    else:
+        _fail(problems, f"overhead_frac={ov:+.3f} > {max_overhead}")
+    lines, regressions = report.diff(
+        [{"kind": "summary", **base.get("summary", {})}],
+        [{"kind": "summary", **fresh.get("summary", {})}], tol_scale)
+    gating = fresh.get("rounds") == base.get("rounds")
+    tag = "" if gating else " (round counts differ: informational)"
+    for line in lines:
+        print(f"       {line}{tag}")
+    if gating and regressions:
+        _fail(problems, f"summary regression in {', '.join(regressions)}")
+
+
+def check_gauntlet(fresh, base, problems):
+    fs, bs = fresh["schemes"], base["schemes"]
+    if set(fs) == set(bs):
+        _ok(f"scheme set unchanged ({len(fs)} schemes)")
+    else:
+        _fail(problems, f"scheme set drifted: fresh-only="
+                        f"{sorted(set(fs) - set(bs))} committed-only="
+                        f"{sorted(set(bs) - set(fs))}")
+    for name in sorted(set(fs) & set(bs)):
+        if fs[name]["engine"] != bs[name]["engine"]:
+            _fail(problems, f"{name}: engine {bs[name]['engine']} -> "
+                            f"{fs[name]['engine']}")
+    ratio = fs["scaffold"]["uplink_mb"] / max(fs["syn"]["uplink_mb"], 1e-9)
+    if abs(ratio - 2.0) <= 0.3:
+        _ok(f"scaffold/syn uplink ratio = {ratio:.3f} (2x within 15%)")
+    else:
+        _fail(problems, f"scaffold/syn uplink ratio = {ratio:.3f}, "
+                        "expected 2x within 15%")
+    for name, rec in sorted(fs.items()):
+        if rec["uplink_mb"] <= 0:
+            _fail(problems, f"{name}: uplink_mb == {rec['uplink_mb']}")
+        if rec.get("downlink_mb", 0) <= 0:
+            _fail(problems, f"{name}: downlink_mb == "
+                            f"{rec.get('downlink_mb')}")
+    _ok("every scheme moved bytes both directions")
+
+
+def check_contracts(fresh, base, problems):
+    for side, d in (("fresh", fresh), ("committed", base)):
+        off = d["results"]["off"]["counters"]
+        if all(v == 0 for v in off.values()):
+            _ok(f"{side}: every off-mode counter zero")
+        else:
+            _fail(problems, f"{side}: off-mode counters nonzero: "
+                            f"{ {k: v for k, v in off.items() if v} }")
+    fresh_on = fresh["results"]["on"]["counters"]
+    for k, v in base["results"]["on"]["counters"].items():
+        if v > 0 and fresh_on.get(k, 0) == 0:
+            _fail(problems, f"on-mode check family {k} collapsed to zero "
+                            f"(committed ran {v})")
+    _ok("on-mode check families still exercised")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", default=None,
+                    help=f"bench JSONs to gate (default: {', '.join(FILES)})")
+    ap.add_argument("--ref", default="HEAD",
+                    help="git ref holding the committed baselines")
+    ap.add_argument("--fresh-dir", default=".",
+                    help="directory holding the freshly regenerated JSONs")
+    ap.add_argument("--tol-scale", type=float, default=1.0,
+                    help="scale every repro.obs diff tolerance")
+    ap.add_argument("--max-overhead", type=float, default=0.5,
+                    help="absolute ceiling on observability overhead_frac")
+    args = ap.parse_args(argv)
+    problems: list = []
+    checked = 0
+    for name in args.files or FILES:
+        print(f"## {name}")
+        fresh_path = os.path.join(args.fresh_dir, os.path.basename(name))
+        if not os.path.exists(fresh_path):
+            print("  skip: no fresh run (not regenerated in this job)")
+            continue
+        base = committed_json(os.path.basename(name), args.ref)
+        if base is None:
+            print(f"  skip: no committed baseline at {args.ref}")
+            continue
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        checked += 1
+        if "observability" in name:
+            check_observability(fresh, base, problems, args.tol_scale,
+                                args.max_overhead)
+        elif "gauntlet" in name:
+            check_gauntlet(fresh, base, problems)
+        elif "contracts" in name:
+            check_contracts(fresh, base, problems)
+        else:
+            print("  skip: no checks registered for this file")
+    if problems:
+        print(f"\n{len(problems)} regression(s):")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"\n{checked} file(s) gated, no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,6 +12,7 @@ Output convention: ``name,us_per_call,derived`` CSV rows.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -242,8 +243,11 @@ def table_scheme_gauntlet(model="lenet", rounds=12, nc=4, ns=4, seed=0,
             "final_acc": hist[-1]["acc"],
             "sim_time": hist[-1]["time"],
             "uplink_mb": run.uplink_bytes() / 1e6,
+            "downlink_mb": run.downlink_bytes() / 1e6,
             "trajectory": [{"time": round(h["time"], 4),
-                            "acc": round(h["acc"], 4)} for h in hist],
+                            "acc": round(h["acc"], 4),
+                            "downlink_mb": round(h.get("downlink_mb", 0.0),
+                                                 4)} for h in hist],
         }
         if sch.soft_training:
             strag = next(c for c in run.clients if c.is_straggler)
@@ -256,7 +260,8 @@ def table_scheme_gauntlet(model="lenet", rounds=12, nc=4, ns=4, seed=0,
         emit(f"scheme_gauntlet/{model}/{scheme}",
              rec["sim_time"] / max(hist[-1]["cycle"], 1) * 1e6,
              f"acc={rec['final_acc']:.3f};simtime={rec['sim_time']:.2f};"
-             f"uplink_mb={rec['uplink_mb']:.2f}" + extra)
+             f"uplink_mb={rec['uplink_mb']:.2f};"
+             f"downlink_mb={rec['downlink_mb']:.2f}" + extra)
     with open(out_path, "w") as f:
         json.dump({"model": model, "rounds": rounds,
                    "fleet": {"capable": nc, "stragglers": ns},
@@ -638,6 +643,101 @@ def table_contracts_overhead(model="lenet", n_clients=8, rounds=6,
 
 
 # ---------------------------------------------------------------------------
+# observability: telemetry cost on the batched engine, off vs on
+# ---------------------------------------------------------------------------
+
+
+def table_observability(model="lenet", n_clients=8, rounds=6, reps=3,
+                        out_path="BENCH_observability.json",
+                        run_dir="obs_run"):
+    """repro.obs telemetry cost on the batched engine, off vs on (the
+    table_contracts_overhead pattern, applied to the other arming seam).
+
+    Same seed/fleet/trajectory both ways.  ``off`` is the default mode:
+    the recorder still does the engine's accounting (counters/accums are
+    the bookkeeping itself) but must buffer ZERO events (asserted and
+    recorded).  ``on`` pays span/event emission inside the round loop;
+    the timed window is eval-free so ``overhead_frac`` prices telemetry
+    alone.  The armed run then takes two evaluated rounds (untimed, both
+    modes, so trajectories stay comparable) and flushes its run log to
+    ``run_dir`` — the input for ``python -m repro.obs report``.  The JSON
+    carries the armed run's manifest and a run-log-shaped ``summary``
+    block so ``python -m repro.obs diff`` compares this bench file and a
+    fresh run log uniformly.
+    """
+    import json
+
+    from repro.obs import recorder as OBS
+    from repro.obs import report as OBR
+
+    cfg = reduced(CNNS[model])
+    noise = _NOISE.get(model, 4.0)
+    imgs, labels = class_gaussian_images(
+        1024, cfg.image_size, cfg.in_channels, cfg.num_classes, seed=0,
+        noise=noise)
+    ti, tl = class_gaussian_images(
+        128, cfg.image_size, cfg.in_channels, cfg.num_classes, seed=99,
+        noise=noise)
+    parts = partition_iid(len(labels), n_clients, seed=0)
+    run_kw = dict(local_steps=1, batch_size=16, lr=0.05, seed=0)
+    runs, best = {}, {}
+    for mode in ("off", "on"):
+        clients = setup_clients(make_fleet(n_clients - n_clients // 2,
+                                           n_clients // 2), parts,
+                                HeliosConfig())
+        with OBS.override(mode == "on"):
+            # the recorder arms at construction, so the run is built
+            # inside the override (exactly how REPRO_OBS=on would see it)
+            run = BatchedFLRun(cfg, HeliosConfig(), "helios", clients,
+                               {"images": imgs, "labels": labels},
+                               {"images": ti, "labels": tl}, **run_kw)
+        run.run_sync(1, eval_every=0)                     # compile warmup
+        jax.block_until_ready(run.global_params)
+        runs[mode], best[mode] = run, float("inf")
+    # interleaved min-of-reps laps: the eval-free window is short
+    # (~rounds x tens of ms), so back-to-back off-then-on measurement
+    # would fold host frequency drift into the overhead number
+    for _ in range(reps):
+        for mode, run in runs.items():
+            t0 = time.perf_counter()
+            run.run_sync(rounds, eval_every=0)
+            jax.block_until_ready(run.global_params)
+            best[mode] = min(best[mode], time.perf_counter() - t0)
+    results = {}
+    for mode, run in runs.items():
+        hist = run.run_sync(2, eval_every=1)              # untimed, w/ eval
+        results[mode] = {"sec_per_round": best[mode] / rounds,
+                         "rounds_per_sec": rounds / best[mode],
+                         "events": len(run.rec.events),
+                         "counters": dict(run.rec.counters)}
+    assert not runs["off"].rec.armed and not runs["off"].rec.events, \
+        "disarmed recorder buffered events"
+    armed_run, armed_hist = runs["on"], hist
+    off, on = results["off"], results["on"]
+    overhead = on["sec_per_round"] / off["sec_per_round"] - 1.0
+    emit(f"observability/{model}/{n_clients}clients/off",
+         off["sec_per_round"] * 1e6,
+         f"rounds_per_sec={off['rounds_per_sec']:.3f};events=0")
+    emit(f"observability/{model}/{n_clients}clients/on",
+         on["sec_per_round"] * 1e6,
+         f"rounds_per_sec={on['rounds_per_sec']:.3f};"
+         f"overhead={overhead * 100:+.1f}%;events={on['events']}")
+    flushed = armed_run.rec.flush(run_dir)
+    print(f"wrote {flushed['events']}")
+    summary = OBR.summarize(
+        OBR.load_events(os.path.join(run_dir, "events.jsonl")))
+    with open(out_path, "w") as f:
+        json.dump({"model": model, "clients": n_clients, "rounds": rounds,
+                   "scheme": "helios",
+                   **{k: v for k, v in run_kw.items() if k != "seed"},
+                   "results": results, "overhead_frac": overhead,
+                   "final_acc": armed_hist[-1]["acc"],
+                   "manifest": dict(armed_run.rec.manifest),
+                   "summary": summary}, f, indent=2)
+    print(f"wrote {out_path}")
+
+
+# ---------------------------------------------------------------------------
 # kernels: wall time + oracle error (CPU interpret)
 # ---------------------------------------------------------------------------
 
@@ -941,6 +1041,7 @@ TABLES = {
     "million_population": table_million_population,
     "async_events": table_async_events,
     "contracts": table_contracts_overhead,
+    "observability": table_observability,
     "kernel_softtrain": table_kernel_softtrain,
     "kernels": bench_kernels,
     "softtrain": bench_softtrain_flops,
@@ -976,6 +1077,8 @@ def main() -> None:
             fn(counts=(64,), capable_per_client=0.5)
         elif args.quick and name == "contracts":
             fn(n_clients=4, rounds=3)
+        elif args.quick and name == "observability":
+            fn(n_clients=4, rounds=3, reps=2)
         elif args.quick and name == "kernel_softtrain":
             fn(fracs=(0.25, 1.0), steps=2)
         else:

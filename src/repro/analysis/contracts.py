@@ -405,6 +405,18 @@ def compile_report(run) -> dict:
     return rep
 
 
+def emit_obs(run, rec) -> None:
+    """Bridge into the telemetry recorder (repro.obs): one ``compile``
+    event per seam from :func:`compile_report` (so retraces are visible in
+    the run log, not just at the budget wall) plus the contract counters
+    funneled in as ``contracts.*`` recorder counters.  ``rec`` is duck
+    typed — contracts stays import-free of the obs package."""
+    for seam, census in compile_report(run).items():
+        rec.event("compile", seam=seam, programs=census)
+    for k, v in counters.items():
+        rec.set("contracts." + k, v)
+
+
 def check_compile_budget(run, *, max_per_signature: int = 1,
                          max_eval_programs: int = 2,
                          tag: str = "compile") -> None:

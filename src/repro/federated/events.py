@@ -54,15 +54,20 @@ class SimClock:
 
     def __init__(self):
         self.now = 0.0
+        #: high-water queue depth (telemetry: repro.obs reads it at the
+        #: end of a run, the per-pop depth is observed engine-side)
+        self.peak_depth = 0
         self._q: list = []
 
     def schedule(self, delay: float, cid: int) -> None:
         heapq.heappush(self._q, (self.now + delay, cid))
+        self.peak_depth = max(self.peak_depth, len(self._q))
 
     def schedule_at(self, time: float, cid: int) -> None:
         """Absolute-time (re)insertion — bucket truncation puts unprocessed
         events back exactly where they were."""
         heapq.heappush(self._q, (time, cid))
+        self.peak_depth = max(self.peak_depth, len(self._q))
 
     def pop(self) -> int:
         t, cid = heapq.heappop(self._q)

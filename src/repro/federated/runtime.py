@@ -43,6 +43,7 @@ cross-engine equivalence contract is stated in exactly one place.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence
 
@@ -68,6 +69,7 @@ from repro.federated.heterogeneity import cycle_time
 from repro.federated.schemes import Scheme, make_scheme
 from repro.launch.mesh import make_client_mesh
 from repro.models import init_params
+from repro.obs import recorder as OBS
 from repro.optim import apply_updates, compression as CP, make_optimizer
 
 
@@ -214,6 +216,12 @@ class FLRun:
     #: convergence gap.  Counts global ``self.round``s; the async event
     #: loops have no round index and always compress.
     comp_warmup: int = 0
+    #: telemetry recorder (repro.obs).  None builds a fresh one, armed
+    #: only when ``REPRO_OBS=on``; pass one to arm explicitly or to share
+    #: a sink across runs.  Every legacy engine counter
+    #: (``uplink_updates``, ``events_processed``, ``agg_counter``, …) is
+    #: a read-only property view onto it.
+    recorder: Optional[OBS.Recorder] = None
 
     def __post_init__(self):
         #: the resolved algorithm policy — every scheme decision in the
@@ -245,20 +253,23 @@ class FLRun:
             raise ValueError("comp_warmup must be >= 0")
         self._comp_total, self._comp_leaves = \
             CP.param_census(self.global_params)
-        #: uplink accounting: updates is a host int, coords a DEVICE scalar
-        #: accumulated eagerly (no host sync in the hot loops; converted
-        #: once in :meth:`uplink_bytes`).  dense_updates counts the
-        #: warmup-round updates that bypassed the codec; extra_updates the
-        #: scheme's dense side-channel (SCAFFOLD control deltas).
-        self.uplink_updates = 0
-        self.uplink_dense_updates = 0
-        self.uplink_extra_updates = 0
-        self.uplink_coords = jnp.float32(0.0)
+        #: the unified accounting surface (repro.obs): uplink/downlink
+        #: update counts are host-int recorder counters, ``uplink_coords``
+        #: a DEVICE scalar accumulated eagerly (no host sync in the hot
+        #: loops; converted once in :meth:`uplink_bytes`).
+        #: ``uplink_dense_updates`` counts the warmup-round updates that
+        #: bypassed the codec; ``uplink_extra_updates`` the scheme's dense
+        #: side-channel (SCAFFOLD control deltas).
+        self.rec = self.recorder if self.recorder is not None \
+            else OBS.Recorder()
+        self.rec.accum("uplink_coords", jnp.float32(0.0))
         if self.compression != "none":
             self._err_store = CP.HostErrorStore(self.global_params)
         self._init_helios()
         self._jit()
         self._scheme.init_run(self)
+        if self.rec.armed:                 # manifest is an emission-side
+            self.rec.manifest.update(self._obs_manifest())
 
     # ------------------------------------------------------------------
     def _init_helios(self):
@@ -309,13 +320,102 @@ class FLRun:
         dense = float(self.uplink_extra_updates) * self._comp_total * 4.0
         if self.compression == "none":
             return dense + float(self.uplink_updates) * self._comp_total * 4.0
-        coords = float(self.uplink_coords)          # repro: noqa[R3]
+        coords = self.rec.accum_value("uplink_coords")
         comp_updates = self.uplink_updates - self.uplink_dense_updates
         return (dense
                 + float(self.uplink_dense_updates) * self._comp_total * 4.0
                 + CP.uplink_bytes(self.compression, coords, self._comp_total,
                                   self._comp_leaves * comp_updates,
                                   self.comp_bits))
+
+    def downlink_bytes(self) -> float:
+        """Total simulated server->client broadcast bytes so far — the
+        accounting twin of :meth:`uplink_bytes` (PR 7 modeled only the
+        uplink).  Every participating update (sync cohort member,
+        processed async event) pulls the dense fp32 global; downlink
+        compression is not modeled, so this is pure host arithmetic."""
+        return float(self.downlink_updates) * self._comp_total * 4.0
+
+    # -- legacy counter views (the recorder is the single surface) -------
+    @property
+    def uplink_updates(self) -> int:
+        return self.rec.count("uplink_updates")
+
+    @property
+    def uplink_dense_updates(self) -> int:
+        return self.rec.count("uplink_dense_updates")
+
+    @property
+    def uplink_extra_updates(self) -> int:
+        return self.rec.count("uplink_extra_updates")
+
+    @property
+    def uplink_coords(self):
+        return self.rec.accum_raw("uplink_coords", jnp.float32(0.0))
+
+    @property
+    def downlink_updates(self) -> int:
+        return self.rec.count("downlink_updates")
+
+    @property
+    def events_processed(self) -> int:
+        return self.rec.count("events_processed")
+
+    @property
+    def events_dropped(self) -> int:
+        return self.rec.count("events_dropped")
+
+    @property
+    def agg_counter(self) -> int:
+        return self.rec.count("agg_counter")
+
+    @property
+    def snapshot_peak(self) -> int:
+        return self.rec.count("snapshot_peak", 1)
+
+    @property
+    def snapshot_anchor_misses(self) -> int:
+        return self.rec.count("snapshot_anchor_misses")
+
+    # -- telemetry ------------------------------------------------------
+    def _obs_manifest(self) -> dict:
+        """Run-identifying manifest for the telemetry sinks: engine,
+        scheme (with its full flag census), family, the kernel and
+        compression knobs, population shape, seeds, and the git sha."""
+        return {"engine": type(self).__name__,
+                "scheme": self.scheme,
+                "scheme_flags": self._scheme.manifest(),
+                "family": self.cfg.family,
+                "model": self.cfg.name,
+                "kernels": self.kernels,
+                "mask_block": self.mask_block,
+                "compression": self.compression,
+                "comp_frac": self.comp_frac,
+                "comp_bits": self.comp_bits,
+                "comp_warmup": self.comp_warmup,
+                "clients": len(self.clients),
+                "participation": self.participation,
+                "sampler": self.sampler,
+                "local_steps": self.local_steps,
+                "batch_size": self.batch_size,
+                "lr": self.lr,
+                "seed": self.seed,
+                "git_sha": OBS.git_sha()}
+
+    def _obs_finish(self, seam: str) -> None:
+        """End-of-run telemetry (armed only — a disarmed run does zero
+        extra work and zero extra host transfers here): final byte
+        gauges, the error-store census, and the contracts bridge
+        (compile report + contract counters), so a flushed run log is
+        self-contained."""
+        if not self.rec.armed:
+            return
+        self.rec.gauge("uplink_mb", self.uplink_bytes() / 1e6)
+        self.rec.gauge("downlink_mb", self.downlink_bytes() / 1e6)
+        if self.compression != "none":
+            self.rec.event("error_store", seam=seam,
+                           **self._err_store.stats())
+        CT.emit_obs(self, self.rec)
 
     def _comp_active(self) -> bool:
         """Whether THIS sync round's uplink goes through the lossy codec
@@ -486,10 +586,15 @@ class FLRun:
         if eval_every > 0 and (r % eval_every == 0 or r == rounds - 1):
             self.history.append({
                 "scheme": self.scheme, "cycle": r + 1, "time": clock,
+                "record_cadence": "round",
                 self.adapter.metric_name: self.evaluate(),
                 "loss": float(np.mean(np.asarray(losses))),
                 "ratios": [float(x) for x in np.asarray(ratios)],
-                "volumes": [c.volume for c in self.clients]})
+                "volumes": [c.volume for c in self.clients],
+                "downlink_mb": self.downlink_bytes() / 1e6})
+            row = self.history[-1]
+            self.rec.event("history", sim=row["time"],
+                           **{k: v for k, v in row.items() if k != "time"})
 
     def run_sync(self, rounds: int, eval_every: int = 1) -> List[dict]:
         """The ONE sync host loop (every scheme with async_native=False).
@@ -511,21 +616,32 @@ class FLRun:
             cclients = [self.clients[i] for i in cohort]
             pace = _collab_pace(cclients)
             times = self._round_times(cclients)
-            self._scheme.round_start(self)
+            self.rec.inc("downlink_updates", len(cohort))   # global broadcast
+            with self.rec.span("scheme.round_start", sim=clock, round=r):
+                self._scheme.round_start(self)
             # contract: the round's device work never syncs to host —
             # losses/ratios stay device values until _record_round's gate
-            with CT.no_host_transfers("run_sync[" + self.scheme + "]"):
+            with self.rec.maybe_profile(r), \
+                    self.rec.span("train_cohort", sim=clock, round=r), \
+                    CT.no_host_transfers("run_sync[" + self.scheme + "]"):
                 losses, ratios = self._train_cohort(cohort, cclients)
-            self.uplink_updates += len(cohort)
+            self.rec.inc("uplink_updates", len(cohort))
             if self.compression != "none" and not self._comp_active():
-                self.uplink_dense_updates += len(cohort)    # warmup rounds
-            self.uplink_extra_updates += \
-                len(cohort) * self._scheme.extra_dense_uplink
+                self.rec.inc("uplink_dense_updates", len(cohort))  # warmup
+            self.rec.inc("uplink_extra_updates",
+                         len(cohort) * self._scheme.extra_dense_uplink)
             CT.assert_finite(self.global_params, tag="run_sync.global_params")
             self._adapt_volumes(cohort, cclients, times, pace)
-            self._scheme.round_end(self)
-            clock += self._scheme.round_duration(times, cclients)
+            with self.rec.span("scheme.round_end", sim=clock, round=r):
+                self._scheme.round_end(self)
+            dur = self._scheme.round_duration(times, cclients)
+            clock += dur
             self.round += 1
+            self.rec.event("round", sim=clock, round=r, cohort=len(cohort),
+                           pace=pace, duration=dur)
+            self.rec.event("volumes", sim=clock, round=r,
+                           volumes=[self._scheme.effective_volume(c)
+                                    for c in cclients if c.is_straggler])
             self._record_round(r, rounds, eval_every, clock, losses, ratios)
         self._finish_sync()
         if CT.enabled():
@@ -535,6 +651,7 @@ class FLRun:
             for masks in self._contract_state_masks():
                 CT.check_mask_invariants(
                     masks, block=self.hcfg.mask_block, tag="run_sync.masks")
+        self._obs_finish("run_sync")   # after the walls: counters complete
         return self.history
 
     # -- engine hooks ---------------------------------------------------
@@ -584,7 +701,7 @@ class FLRun:
             hat, new_err, coords = self._compress_one(
                 base, r[0], self._err_store.row(c.cid), pmasks)
             self._err_store.set_row(c.cid, new_err)
-            self.uplink_coords = self.uplink_coords + coords
+            self.rec.accum("uplink_coords", coords)
             out.append((hat,) + r[1:])
         return out
 
@@ -655,10 +772,10 @@ class FLRun:
             if ring_mode == "delta" else None
         # bookkeeping exposed for tests/monitoring: the snapshot dict must
         # stay bounded by cap + len(clients) and never evict a live anchor
-        self.snapshot_peak = 1
-        self.snapshot_anchor_misses = 0
-        self.events_processed = 0
-        self.events_dropped = 0
+        self.rec.set("snapshot_peak", 1)
+        self.rec.set("snapshot_anchor_misses", 0)
+        self.rec.set("events_processed", 0)
+        self.rec.set("events_dropped", 0)
         for c in self.clients:
             c.staleness_anchor = 0
             clock.schedule(self._next_delay(c), c.cid)
@@ -669,7 +786,8 @@ class FLRun:
             cid = clock.pop()
             c = by_id[cid]
             if self.dropout is not None and self.dropout.drops(cid):
-                self.events_dropped += 1
+                self.rec.inc("events_dropped")
+                self.rec.event("drop", sim=clock.now, cid=cid)
                 clock.schedule(self._next_delay(c) * self.dropout.penalty,
                                cid)
                 continue
@@ -677,6 +795,8 @@ class FLRun:
             # back to the current global params and mislabel staleness
             base = snapshots[c.staleness_anchor]
             stale = agg_counter - c.staleness_anchor
+            self.rec.event("completion", sim=clock.now, cid=cid, stale=stale)
+            self.rec.observe("staleness", stale)
             CT.check_staleness([stale], a=staleness_a, tag="run_async[seq]")
             with CT.no_host_transfers("run_async[seq]"):
                 if ring_mode != "fp32" and stale >= self.comp_fresh:
@@ -687,9 +807,10 @@ class FLRun:
                     new_params, new_err, coords = self._compress_one(
                         base, new_params, self._err_store.row(c.cid), pmasks)
                     self._err_store.set_row(c.cid, new_err)
-                    self.uplink_coords = self.uplink_coords + coords
-                self.uplink_updates += 1
-                self.uplink_extra_updates += self._scheme.extra_dense_uplink
+                    self.rec.accum("uplink_coords", coords)
+                self.rec.inc("uplink_updates")
+                self.rec.inc("uplink_extra_updates",
+                             self._scheme.extra_dense_uplink)
                 w = self._scheme.async_weight(mix_weight, stale, staleness_a)
                 self.global_params = AG.mix(self.global_params, new_params, w)
                 if self._scheme.uses_control:
@@ -709,27 +830,37 @@ class FLRun:
                         del snapshots[k]
                 # eviction is the only step that could drop an anchor, so
                 # the invariant check stays off the no-eviction fast path
-                self.snapshot_anchor_misses += sum(
+                self.rec.inc("snapshot_anchor_misses", sum(
                     cl.staleness_anchor not in snapshots
-                    for cl in self.clients)
-            self.snapshot_peak = max(self.snapshot_peak, len(snapshots))
+                    for cl in self.clients))
+            self.rec.set_max("snapshot_peak", len(snapshots))
             clock.schedule(self._next_delay(c), cid)
-            self.events_processed += 1
+            self.rec.inc("events_processed")
+            self.rec.inc("downlink_updates")   # the event's snapshot pull
+            self.rec.observe("queue_depth", len(clock))
             if not c.is_straggler:
                 done_fast += 1
                 if eval_every > 0 and done_fast % eval_every == 0:
                     self.history.append({
                         "scheme": self.scheme, "cycle": done_fast,
                         "time": clock.now,
+                        "record_cadence": "event",
                         self.adapter.metric_name: self.evaluate(),
                         # behind the eval gate: evaluate() just synced
                         "loss": float(loss),  # repro: noqa[R3]
-                        "staleness": stale})
-        self.agg_counter = agg_counter
+                        "staleness": stale,
+                        "downlink_mb": self.downlink_bytes() / 1e6})
+                    row = self.history[-1]
+                    self.rec.event("history", sim=row["time"],
+                                   **{k: v for k, v in row.items()
+                                      if k != "time"})
+        self.rec.set("agg_counter", agg_counter)
+        self.rec.set("queue_peak", clock.peak_depth)
         CT.check_snapshot_bound(self.snapshot_peak,
                                 self.snapshot_anchor_misses,
                                 snapshot_cap, len(self.clients),
                                 tag="run_async[seq].snapshots")
+        self._obs_finish("run_async[seq]")
         return self.history
 
     # ------------------------------------------------------------------
@@ -925,9 +1056,9 @@ class AsyncFLRun(FLRun):
             c.staleness_anchor = 0
             ring.alloc.retain(0)
             clock.schedule(self._next_delay(c), c.cid)
-        self.agg_counter = 0
-        self.events_processed = 0
-        self.events_dropped = 0
+        self.rec.set("agg_counter", 0)
+        self.rec.set("events_processed", 0)
+        self.rec.set("events_dropped", 0)
         self.bucket_sizes: List[int] = []
         done_fast = 0
         next_rec = eval_every if eval_every > 0 else 0
@@ -944,7 +1075,14 @@ class AsyncFLRun(FLRun):
             for i, ev in enumerate(evs):
                 if self.dropout is not None and self.dropout.drops(ev.cid):
                     drop_cids.add(ev.cid)
+                    self.rec.event("drop", sim=ev.time, cid=ev.cid)
                     continue
+                # the event stream mirrors the sequential reference: one
+                # completion per executed event, emitted in pop order with
+                # drops interleaved, staleness counted pre-mix
+                self.rec.event("completion", sim=ev.time, cid=ev.cid,
+                               stale=self.agg_counter + len(exec_evs)
+                               - by_id[ev.cid].staleness_anchor)
                 exec_evs.append(ev)
                 if not by_id[ev.cid].is_straggler:
                     budget -= 1
@@ -985,10 +1123,13 @@ class AsyncFLRun(FLRun):
                     ring.alloc.retain(new_agg)
                     c.staleness_anchor = new_agg
                     fresh_write.append(new_agg % F)
-                self.agg_counter = agg0 + b
+                self.rec.set("agg_counter", agg0 + b)
+                for s in stales:
+                    self.rec.observe("staleness", s)
                 CT.check_staleness(stales, a=staleness_a,
                                    tag="run_async[bucket]")
                 pad = bpad - b
+                _bt0 = time.perf_counter() if self.rec.armed else 0.0
                 bucket_fn = self._get_bucket_fn(bpad)
                 if self.compression == "none":
                     with CT.no_host_transfers("run_async[bucket]"):
@@ -1025,16 +1166,23 @@ class AsyncFLRun(FLRun):
                             jnp.asarray([1.0] * b + [0.0] * pad,
                                         jnp.float32),
                             float(mix_weight), float(staleness_a))
-                        self.uplink_coords = self.uplink_coords + coords
+                        self.rec.accum("uplink_coords", coords)
                     if lossy_ring:
                         ring.q, ring.scales, ring.fresh_buf = ring_state
                     else:
                         ring.params, = ring_state
                     self._err_store.scatter(
                         cids, jax.tree.map(lambda x: x[:b], new_err))
-                self.uplink_updates += b
-                self.events_processed += b
+                self.rec.inc("uplink_updates", b)
+                self.rec.inc("events_processed", b)
+                self.rec.inc("downlink_updates", b)  # per-event ring pulls
                 self.bucket_sizes.append(b)
+                self.rec.observe("bucket_size", b)
+                self.rec.observe("queue_depth", len(clock))
+                self.rec.event(
+                    "bucket", sim=clock.now, size=b, pad=bpad - b,
+                    queue=len(clock),
+                    wall_ms=(time.perf_counter() - _bt0) * 1e3)
                 done_fast += sum(1 for ev in exec_evs
                                  if not by_id[ev.cid].is_straggler)
             # reschedule every handled event in event order (arrival-stream
@@ -1045,23 +1193,31 @@ class AsyncFLRun(FLRun):
                 if ev.cid in drop_cids:
                     delay *= self.dropout.penalty
                 clock.schedule_at(ev.time + delay, ev.cid)
-            self.events_dropped += len(drop_cids)
+            self.rec.inc("events_dropped", len(drop_cids))
             if next_rec and b and done_fast >= next_rec:
                 self.history.append({
                     "scheme": self.scheme, "cycle": done_fast,
                     "time": clock.now,
+                    "record_cadence": "bucket",
                     self.adapter.metric_name: self.evaluate(),
                     # behind the eval gate: evaluate() just synced
                     "loss": float(np.mean(np.asarray(losses)[:b])),  # repro: noqa[R3]
                     "staleness": float(np.mean(stales)),
-                    "bucket": b})
+                    "bucket": b,
+                    "downlink_mb": self.downlink_bytes() / 1e6})
+                row = self.history[-1]
+                self.rec.event("history", sim=row["time"],
+                               **{k: v for k, v in row.items()
+                                  if k != "time"})
                 next_rec = (done_fast // eval_every + 1) * eval_every
-        self.snapshot_peak = ring.alloc.peak_live
-        self.snapshot_anchor_misses = ring.alloc.anchor_misses
+        self.rec.set("snapshot_peak", ring.alloc.peak_live)
+        self.rec.set("snapshot_anchor_misses", ring.alloc.anchor_misses)
+        self.rec.set("queue_peak", clock.peak_depth)
         if CT.enabled():
             CT.check_ring(ring, len(self.clients),
                           tag="run_async[bucket].ring")
             CT.check_compile_budget(self, tag="run_async[bucket].compile")
+        self._obs_finish("run_async[bucket]")
         return self.history
 
 
@@ -1322,7 +1478,7 @@ class BatchedFLRun(AsyncFLRun):
                         s_batch, c_batch, self._unperm, *extras, err)
         (self.global_params, self._sstate, ratios, losses, new_err,
          coords) = outs[:6]
-        self.uplink_coords = self.uplink_coords + coords
+        self.rec.accum("uplink_coords", coords)
         self._err_store.scatter(cids, new_err)
         self._apply_round_outs(self.clients, outs[6:])
         # device arrays on purpose — _record_round converts behind the gate
@@ -1370,7 +1526,7 @@ class BatchedFLRun(AsyncFLRun):
                             stack(c_pos), unperm, *extras, err)
             (self.global_params, sstate, ratios, losses, new_err,
              coords) = outs[:6]
-            self.uplink_coords = self.uplink_coords + coords
+            self.rec.accum("uplink_coords", coords)
             self._err_store.scatter(cids, new_err)
             self._apply_round_outs(cclients, outs[6:])
         if s_pos:
@@ -1731,7 +1887,7 @@ class ShardedFLRun(BatchedFLRun):
                             valid, *extras, err)
             (self.global_params, new_cstate, ratios, losses, new_err,
              coords) = outs[:6]
-            self.uplink_coords = self.uplink_coords + coords
+            self.rec.accum("uplink_coords", coords)
             self._err_store.scatter(
                 [self.clients[i].cid for i in cohort],
                 jax.tree.map(lambda x: x[:k], new_err))

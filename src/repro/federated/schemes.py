@@ -108,6 +108,21 @@ class Scheme:
     #: extra dense fp32 pytrees uploaded per update (control deltas)
     extra_dense_uplink = 0
 
+    def manifest(self) -> Dict[str, object]:
+        """Flag census for the run manifest (repro.obs): which policy
+        switches this scheme flips, so a run log names its algorithm
+        unambiguously even after flags gain new defaults."""
+        return {"name": self.name,
+                "soft_training": self.soft_training,
+                "async_native": self.async_native,
+                "staleness_discount": self.staleness_discount,
+                "adapt_volume": self.adapt_volume,
+                "use_delta_scores": self.use_delta_scores,
+                "uses_control": self.uses_control,
+                "uses_stale_base": self.uses_stale_base,
+                "full_volume": self.full_volume,
+                "extra_dense_uplink": self.extra_dense_uplink}
+
     # -- per-round policy ----------------------------------------------
     def effective_hcfg(self, hcfg: HeliosConfig) -> HeliosConfig:
         """The HeliosConfig soft-training actually sees (one definition

@@ -244,6 +244,11 @@ class HostErrorStore:
         return sum(x.nbytes for r in self._rows.values()
                    for x in jax.tree.leaves(r))
 
+    def stats(self) -> Dict[str, int]:
+        """Store census for the telemetry sinks (repro.obs): materialized
+        client rows + host bytes they hold."""
+        return {"rows": self.touched(), "bytes": self.nbytes()}
+
 
 def param_census(params) -> Tuple[int, int]:
     """(total scalar count, leaf count) — the uplink-bytes denominators."""
