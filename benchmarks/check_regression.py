@@ -27,6 +27,11 @@ zero-counters are:
   sides (contracts off is free), and any check family the committed
   ``on`` run exercised is still exercised fresh (check volume cannot
   silently collapse).
+* ``BENCH_serve_traffic.json`` — the hot-swap invariants that survive
+  any scale: exactly ONE compiled prefill + decode program across every
+  swap (a recompile on swap is the bug the traced-params design
+  exists to prevent), at least one swap observed and no more swaps than
+  promotion decisions, and the served latency p99 finite.
 
 A baseline missing from the ref (a brand-new bench) or a fresh file not
 regenerated in this CI job is skipped with a note, never failed — the
@@ -43,7 +48,7 @@ import sys
 from repro.obs import report
 
 FILES = ("BENCH_observability.json", "BENCH_scheme_gauntlet.json",
-         "BENCH_contracts.json")
+         "BENCH_contracts.json", "BENCH_serve_traffic.json")
 
 
 def committed_json(name: str, ref: str):
@@ -138,6 +143,37 @@ def check_contracts(fresh, base, problems):
     _ok("on-mode check families still exercised")
 
 
+def check_serve_traffic(fresh, base, problems):
+    for side, d in (("fresh", fresh), ("committed", base)):
+        progs = d.get("programs", {})
+        if progs == {"prefill": 1, "decode": 1}:
+            _ok(f"{side}: one compiled program per serving seam "
+                "across all swaps")
+        else:
+            _fail(problems, f"{side}: hot swap recompiled the serving "
+                            f"path: programs={progs}")
+    res = fresh["results"]
+    if res.get("swaps", 0) >= 1:
+        _ok(f"swaps = {res['swaps']} (>= 1)")
+    else:
+        _fail(problems, "no hot swap observed (swaps == "
+                        f"{res.get('swaps')})")
+    # polling decides only the LATEST step, so snapshots superseded
+    # between polls are legitimately never decided — gate the ordering
+    # invariants, not a decided-per-publish count
+    decided = res.get("promotions", 0) + res.get("rejections", 0)
+    if 1 <= res.get("swaps", 0) <= decided:
+        _ok(f"swaps ({res['swaps']}) <= promotion decisions ({decided})")
+    else:
+        _fail(problems, f"swap/decision ordering broken: swaps="
+                        f"{res.get('swaps')} decided={decided}")
+    p99 = res.get("p99_ms")
+    if p99 is not None and p99 > 0:
+        _ok(f"p99 latency recorded ({p99:.1f} ms)")
+    else:
+        _fail(problems, f"p99 latency missing/invalid: {p99}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("files", nargs="*", default=None,
@@ -173,6 +209,8 @@ def main(argv=None) -> int:
             check_gauntlet(fresh, base, problems)
         elif "contracts" in name:
             check_contracts(fresh, base, problems)
+        elif "serve_traffic" in name:
+            check_serve_traffic(fresh, base, problems)
         else:
             print("  skip: no checks registered for this file")
     if problems:

@@ -738,6 +738,120 @@ def table_observability(model="lenet", n_clients=8, rounds=6, reps=3,
 
 
 # ---------------------------------------------------------------------------
+# serve-while-you-train: Poisson traffic against the live global model
+# ---------------------------------------------------------------------------
+
+
+def table_serve_traffic(arch="deepseek-7b", n_clients=4, rounds=4,
+                        rate_hz=20.0, batch=4, prompt_len=16, gen=4,
+                        kernels="reference", max_requests=200,
+                        out_path="BENCH_serve_traffic.json",
+                        run_dir="obs_serve"):
+    """The first bench that measures the system as a SERVICE: batched
+    generation traffic served against the live global model while a
+    `BatchedFLRun` trains concurrently in the same process.
+
+    The training thread publishes atomic snapshots every round
+    (``publish_dir``); the serving thread polls them behind the
+    eval-gated promotion rule and hot-swaps lock-free (params are a
+    traced argument, so ``GenerationServer`` keeps ONE compiled
+    prefill + ONE decode program across every swap — asserted).  Load
+    is an open-loop Poisson arrival schedule (fixed by seed): latency
+    per request is completion minus SCHEDULED arrival, so queueing
+    delay under overload is priced in rather than the arrival process
+    quietly slowing down, and a decode's intermediate steps stay
+    async-dispatched — each request blocks once, on its own response.
+    Both planes share one armed recorder, flushed to ``run_dir`` for
+    ``python -m repro.obs report``.
+    """
+    import json
+    import tempfile
+
+    from repro import checkpoint as CKPT
+    from repro.configs import ARCHS
+    from repro.data.federated import partition_by_topic
+    from repro.data.synthetic import markov_tokens, markov_topic_tokens
+    from repro.launch.serve import (GenerationServer, PoissonTraffic,
+                                    ServeLoop, make_ce_eval, serve_batch,
+                                    serve_while_training)
+    from repro.models import init_params
+    from repro.obs import recorder as OBS
+    from repro.obs import report as OBR
+
+    cfg = reduced(ARCHS[arch])
+    data_vocab = min(64, cfg.vocab_size)
+    tokens, topics = markov_topic_tokens(256, 32, data_vocab,
+                                         n_topics=8, seed=0)
+    test_tokens, _ = markov_topic_tokens(64, 32, data_vocab,
+                                         n_topics=8, seed=99)
+    parts = partition_by_topic(topics, n_clients, topics_per_client=2)
+    hcfg = HeliosConfig()
+    clients = setup_clients(make_fleet(n_clients - n_clients // 2,
+                                       n_clients // 2), parts, hcfg)
+    rec = OBS.Recorder(armed=True)
+    pub = tempfile.mkdtemp(prefix="serve_pub_")
+    run_kw = dict(local_steps=2, batch_size=8, lr=0.1, seed=0,
+                  eval_batch=64)
+    run = BatchedFLRun(cfg, hcfg, "helios", clients, {"tokens": tokens},
+                       {"tokens": test_tokens}, recorder=rec,
+                       publish_dir=pub, publish_every=1, **run_kw)
+
+    srv = GenerationServer(cfg, batch, prompt_len, gen=gen, kernels=kernels)
+    held = {"tokens": jnp.asarray(test_tokens[:32])}
+    serve = ServeLoop(pub, init_params(jax.random.PRNGKey(0), cfg),
+                      request_fn=srv, eval_fn=make_ce_eval(cfg, held),
+                      higher_is_better=False, tol=0.05, recorder=rec)
+    # round 0 snapshot: traffic has something to serve from request one
+    CKPT.save(pub, 0, run.global_params, keep=run.publish_keep,
+              metadata={"round": 0, "sim_time": 0.0, "scheme": run.scheme})
+    assert serve.poll(), "initial snapshot must promote"
+    prompts = markov_tokens(batch, prompt_len, cfg.padded_vocab, seed=7)
+    req = serve_batch(cfg, prompts, np.random.default_rng(7))
+    serve.handle(req)                      # compile warmup, untimed
+    traffic = PoissonTraffic(rate_hz=rate_hz, seed=0)
+    stats = serve_while_training(lambda: run.run_sync(rounds),
+                                 serve, traffic, lambda i: req,
+                                 min_requests=10, max_requests=max_requests)
+
+    assert srv.programs() == {"prefill": 1, "decode": 1}, \
+        f"hot swap recompiled the serving path: {srv.programs()}"
+    swaps = rec.count("serve_swaps")
+    assert swaps >= 1 and rec.count("published_snapshots") == rounds
+    lat = sorted(stats["latency_ms"])
+    n = len(lat)
+    p50, p99 = lat[n // 2], lat[min((99 * n) // 100, n - 1)]
+    emit(f"serve_traffic/{arch}/{rate_hz:g}hz/{kernels}",
+         stats["wall_s"] / max(stats["requests"], 1) * 1e6,
+         f"req_per_sec={stats['requests_per_sec']:.1f};"
+         f"p50={p50:.1f}ms;p99={p99:.1f}ms;swaps={swaps}")
+    flushed = rec.flush(run_dir)
+    print(f"wrote {flushed['events']}")
+    summary = OBR.summarize(
+        OBR.load_events(os.path.join(run_dir, "events.jsonl")))
+    with open(out_path, "w") as f:
+        json.dump({"arch": arch, "clients": n_clients, "rounds": rounds,
+                   "scheme": "helios", "kernels": kernels,
+                   "batch": batch, "prompt_len": prompt_len, "gen": gen,
+                   **{k: v for k, v in run_kw.items() if k != "seed"},
+                   "results": {
+                       "requests": stats["requests"],
+                       "wall_s": stats["wall_s"],
+                       "requests_per_sec": stats["requests_per_sec"],
+                       "offered_rate_hz": stats["offered_rate_hz"],
+                       "p50_ms": p50, "p99_ms": p99,
+                       "swaps": swaps,
+                       "promotions": rec.count("serve_promotions"),
+                       "rejections": rec.count("serve_rejections"),
+                       "published": rec.count("published_snapshots"),
+                       "served_step": serve.served_step,
+                       "served_round": serve.served_round},
+                   "programs": srv.programs(),
+                   "manifest": dict(rec.manifest),
+                   "summary": summary}, f, indent=2)
+    print(f"wrote {out_path}")
+
+
+# ---------------------------------------------------------------------------
 # kernels: wall time + oracle error (CPU interpret)
 # ---------------------------------------------------------------------------
 
@@ -1042,6 +1156,7 @@ TABLES = {
     "async_events": table_async_events,
     "contracts": table_contracts_overhead,
     "observability": table_observability,
+    "serve_traffic": table_serve_traffic,
     "kernel_softtrain": table_kernel_softtrain,
     "kernels": bench_kernels,
     "softtrain": bench_softtrain_flops,
@@ -1079,6 +1194,8 @@ def main() -> None:
             fn(n_clients=4, rounds=3)
         elif args.quick and name == "observability":
             fn(n_clients=4, rounds=3, reps=2)
+        elif args.quick and name == "serve_traffic":
+            fn(rounds=2, rate_hz=50.0, max_requests=40)
         elif args.quick and name == "kernel_softtrain":
             fn(fracs=(0.25, 1.0), steps=2)
         else:

@@ -21,7 +21,7 @@ body — a pure re-export (``__all__`` string only) keeps a submodule
 alive only if some live consumer imports it through the package.
 Test imports are deliberately NOT roots: a module only tests exercise
 has no production caller — exactly the state worth surfacing (today:
-``optim/compression.py``, ``launch/serve.py``).  Intentional orphans
+``optim/compression.py``).  Intentional orphans
 carry a module-level ``# repro: noqa[R6]`` and stay visible in the
 JSON report.
 """

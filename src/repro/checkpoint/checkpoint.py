@@ -8,6 +8,13 @@ latest checkpoint; restart picks up the newest complete step.
 Compression: ``zstandard`` when available, stdlib ``zlib`` otherwise.  Files
 carry a 5-byte header (magic + codec flag) so either build reads the other's
 checkpoints; headerless files are legacy raw-zstd frames.
+
+Single-writer contract: one process/thread publishes into a directory at a
+time (the FL loop's round-end publish hook).  Readers (the serve-while-you-
+train hot-swap path) only ever see complete ``ckpt_*.msgpack.zst`` files —
+in-flight ``*.tmp`` files never match the key pattern, so ``latest_step`` /
+``restore`` cannot observe a partial write; ``_gc`` sweeps tmp leftovers a
+crash mid-write abandoned.
 """
 from __future__ import annotations
 
@@ -99,6 +106,11 @@ def _unpack_leaf(d) -> np.ndarray:
 
 def save(directory: str, step: int, tree: Any, keep: int = 3,
          metadata: Optional[dict] = None) -> str:
+    if keep < 1:
+        # keep=0 used to make steps[:-keep] the EMPTY slice in _gc, so GC
+        # silently kept everything; fail loudly instead of guessing intent
+        raise ValueError(f"keep must be >= 1 (the newest checkpoint is "
+                         f"never GC'd), got {keep}")
     os.makedirs(directory, exist_ok=True)
     flat = {k: _pack_leaf(v) for k, v in _flatten(jax.device_get(tree)).items()}
     payload = msgpack.packb({"step": step, "leaves": flat,
@@ -143,7 +155,13 @@ def restore(directory: str, target: Any, step: Optional[int] = None):
             return {k: rebuild(v, path + (str(k),)) for k, v in node.items()}
         if isinstance(node, (list, tuple)):
             t = [rebuild(v, path + (f"<{i}>",)) for i, v in enumerate(node)]
-            return type(node)(t) if not isinstance(node, tuple) else tuple(t)
+            if isinstance(node, tuple):
+                # NamedTuple containers (optimizer states) construct from
+                # positional fields — plain tuple(t) would collapse them
+                # into a different pytree type than the target
+                return type(node)(*t) if hasattr(node, "_fields") \
+                    else tuple(t)
+            return type(node)(t)
         key = "/".join(path)
         arr = flat[key]
         leaf = np.asarray(node)
@@ -160,6 +178,10 @@ def restore(directory: str, target: Any, step: Optional[int] = None):
 def metadata(directory: str, step: Optional[int] = None) -> dict:
     if step is None:
         step = latest_step(directory)
+        if step is None:
+            # same clean error as restore() — not the baffling
+            # "ckpt_None.msgpack.zst" FileNotFoundError
+            raise FileNotFoundError(f"no checkpoints in {directory}")
     path = os.path.join(directory, f"ckpt_{step}.msgpack.zst")
     with open(path, "rb") as f:
         raw = _decompress(f.read())
@@ -167,10 +189,20 @@ def metadata(directory: str, step: Optional[int] = None) -> dict:
 
 
 def _gc(directory: str, keep: int):
-    steps = sorted(int(m.group(1)) for f in os.listdir(directory)
-                   if (m := _KEY_RE.match(f)))
+    if keep < 1:
+        raise ValueError(f"keep must be >= 1, got {keep}")
+    names = os.listdir(directory)
+    steps = sorted(int(m.group(1)) for f in names if (m := _KEY_RE.match(f)))
     for s in steps[:-keep]:
         try:
             os.remove(os.path.join(directory, f"ckpt_{s}.msgpack.zst"))
         except OSError:
             pass
+    # sweep tmp leftovers from a crash mid-write (single-writer contract:
+    # the only live tmp is save()'s own, already os.replace'd by now)
+    for f in names:
+        if f.endswith(".tmp") and _KEY_RE.match(f[:-len(".tmp")]):
+            try:
+                os.remove(os.path.join(directory, f))
+            except OSError:
+                pass

@@ -54,6 +54,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro import checkpoint as CKPT
 from repro.analysis import contracts as CT
 from repro.configs.base import HeliosConfig, ModelConfig
 from repro.core import aggregation as AG
@@ -222,6 +223,16 @@ class FLRun:
     #: (``uplink_updates``, ``events_processed``, ``agg_counter``, …) is
     #: a read-only property view onto it.
     recorder: Optional[OBS.Recorder] = None
+    #: serve-while-you-train publish seam: when set, every
+    #: ``publish_every``-th sync round writes the global params to this
+    #: directory as an atomic checkpoint (repro.checkpoint: tmp write +
+    #: fsync + os.replace) with ``{"round", "sim_time", "scheme"}``
+    #: metadata, keep-``publish_keep`` GC'd.  A ``launch.serve.ServeLoop``
+    #: polling the directory hot-swaps onto each publish; atomicity means
+    #: it can never observe a partial snapshot.
+    publish_dir: Optional[str] = None
+    publish_every: int = 1
+    publish_keep: int = 3
 
     def __post_init__(self):
         #: the resolved algorithm policy — every scheme decision in the
@@ -251,6 +262,8 @@ class FLRun:
                              "least the newest anchor full-precision)")
         if self.comp_warmup < 0:
             raise ValueError("comp_warmup must be >= 0")
+        if self.publish_every < 1:
+            raise ValueError("publish_every must be >= 1")
         self._comp_total, self._comp_leaves = \
             CP.param_census(self.global_params)
         #: the unified accounting surface (repro.obs): uplink/downlink
@@ -642,6 +655,8 @@ class FLRun:
             self.rec.event("volumes", sim=clock, round=r,
                            volumes=[self._scheme.effective_volume(c)
                                     for c in cclients if c.is_straggler])
+            if self.publish_dir and (r + 1) % self.publish_every == 0:
+                self._publish_round(r, clock)
             self._record_round(r, rounds, eval_every, clock, losses, ratios)
         self._finish_sync()
         if CT.enabled():
@@ -729,6 +744,19 @@ class FLRun:
 
     def _finish_sync(self) -> None:
         pass
+
+    def _publish_round(self, r: int, clock: float) -> None:
+        """Round-end publish seam (serve-while-you-train): snapshot the
+        current global params atomically so a concurrently-polling
+        ``ServeLoop`` can hot-swap onto it.  Shared verbatim by every
+        engine that runs the ``run_sync`` template."""
+        with self.rec.span("publish", sim=clock, round=r):
+            CKPT.save(self.publish_dir, self.round, self.global_params,
+                      keep=self.publish_keep,
+                      metadata={"round": self.round, "sim_time": clock,
+                                "scheme": self.scheme})
+        self.rec.inc("published_snapshots")
+        self.rec.event("publish", sim=clock, round=r, step=self.round)
 
     def _contract_state_masks(self):
         """Mask trees the post-run contract sweep validates (structure

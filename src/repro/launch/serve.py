@@ -1,23 +1,360 @@
-"""Serving driver: batched prefill + decode loop with KV/SSM caches.
+"""Serve-while-you-train: batched inference + lock-free checkpoint hot-swap.
 
-# repro: noqa[R6] — standalone CLI entry point exercised only by tests;
-kept as the serving surface (tracked in ROADMAP.md).
+The serving plane of the reproduction.  Three pieces compose into the
+"traffic against the live global model" story (the benchmarks/examples
+drive them; ``python -m repro.launch.serve`` remains the standalone
+single-shot generation bench):
+
+* :class:`GenerationServer` — the batched-inference path: jitted prefill +
+  decode (the cached seams in :mod:`repro.models.api`) with the params
+  tree as a TRACED argument, so swapping snapshots never recompiles, and
+  ``mask=ones`` full-volume masks threaded through the same kernel seam
+  training uses (``kernels="pallas"`` routes the Pallas masked kernels,
+  interpret mode on CPU).
+* :class:`ServeLoop` — lock-free hot-swap serving.  The training loop
+  publishes atomic snapshots (``FLRun.publish_dir`` -> ``checkpoint.save``:
+  tmp write + fsync + ``os.replace``); :meth:`ServeLoop.poll` picks up new
+  steps behind an eval-gated promotion rule (promote only if the held-out
+  metric does not regress beyond ``tol``).  The REQUEST path takes zero
+  locks: a swap is one GIL-atomic rebind of the ``_served`` reference
+  between jitted calls, never mid-program, and a request reads that
+  reference exactly once.  Partially-written snapshots are unobservable by
+  construction — in-flight ``*.tmp`` files never match the checkpoint key
+  pattern (tests/test_serve.py pins the kill-mid-write case).
+* :class:`PoissonTraffic` + :func:`run_traffic` — a deterministic open-loop
+  Poisson load generator: seeded exponential inter-arrivals fix the arrival
+  schedule, per-request latency is measured completion-minus-arrival (so
+  queueing delay under overload is priced in, the open-loop semantics).
+
+Telemetry rides the shared :class:`repro.obs.Recorder`: ``request_ms`` /
+``serve_staleness`` histograms, ``serve_requests`` / ``serve_swaps`` /
+``serve_promotions`` / ``serve_rejections`` counters, and ``swap`` /
+``promotion`` events, so ``python -m repro.obs report`` covers the serving
+plane next to the training rounds.  Counter keys are single-writer (the
+serving thread); the training thread writes its own keys — the GIL makes
+the shared event list safe without a lock on either hot path.
 
   PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m --reduced \
-      --batch 8 --prompt-len 64 --gen 32
+      --batch 8 --prompt-len 64 --gen 32 [--ckpt-dir /tmp/fl_run]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import threading
 import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import checkpoint as CKPT
 from repro.configs import ShapeConfig, get_model_config, reduced as reduce_cfg
+from repro.configs.base import ModelConfig
 from repro.data.synthetic import markov_tokens
-from repro.models import build, default_runtime
+from repro.models import build, default_runtime, make_full_masks
+from repro.obs import recorder as OBS
+
+
+def serve_batch(cfg: ModelConfig, prompts: np.ndarray,
+                rng: np.random.Generator) -> Dict[str, jnp.ndarray]:
+    """Model-input dict for a prompt batch, including the extra streams
+    the vlm/encdec families need."""
+    batch = {"tokens": jnp.asarray(prompts)}
+    n, s = prompts.shape
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(size=(n, cfg.num_image_tokens, cfg.d_model)),
+            jnp.float32)
+    elif cfg.family == "encdec":
+        batch["enc_embeds"] = jnp.asarray(
+            rng.normal(size=(n, s, cfg.d_model)), jnp.float32)
+    return batch
+
+
+class GenerationServer:
+    """Batched greedy generation: ONE jitted prefill + ONE jitted decode
+    program for the (batch, prompt_len) cell, params as a traced argument.
+
+    ``mask=ones`` full-volume masks go through the exact kernel seam the
+    federated engines train through (``kernels="pallas"`` -> the Pallas
+    masked-matmul / flash-attention path), so the serving plane exercises
+    the training substrate rather than a separate inference stack.
+    """
+
+    def __init__(self, cfg: ModelConfig, batch: int, prompt_len: int,
+                 gen: int = 8, kernels: str = "reference",
+                 mask_block: int = 128):
+        if gen < 1:
+            raise ValueError(f"gen must be >= 1, got {gen}")
+        self.cfg = cfg
+        self.gen = gen
+        api = build(cfg)
+        if api.prefill_fn is None:
+            raise ValueError(f"family {cfg.family!r} has no prefill/decode "
+                             "serving path")
+        shape = ShapeConfig("serve", "prefill", prompt_len, batch)
+        rt = default_runtime(cfg, shape)
+        rt["kernels"] = kernels
+        rt["mask_block"] = mask_block
+        masks = make_full_masks(cfg)
+        self._prefill = jax.jit(
+            lambda p, b: api.prefill_fn(p, b, cfg, rt, masks))
+        self._decode = jax.jit(
+            lambda p, t, c: api.decode_fn(p, t, c, cfg, rt, masks))
+
+    def prefill(self, params, batch):
+        return self._prefill(params, batch)
+
+    def decode(self, params, token, cache):
+        return self._decode(params, token, cache)
+
+    def __call__(self, params, batch) -> jnp.ndarray:
+        """Greedy-decode ``gen`` tokens; returns (B, gen) int32."""
+        logits, cache = self._prefill(params, batch)
+        token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out = [token]
+        for _ in range(self.gen - 1):
+            logits, cache = self._decode(params, token, cache)
+            token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            out.append(token)
+        return jnp.concatenate(out, axis=1)
+
+    def programs(self) -> Dict[str, int]:
+        """{seam: compiled-program count} — the serving twin of the engine
+        compile budgets: both must stay 1 across every hot swap (swap =
+        new params leaves, same treedef/shapes/dtypes => cache hit)."""
+        return {"prefill": self._prefill._cache_size(),
+                "decode": self._decode._cache_size()}
+
+
+@dataclasses.dataclass(frozen=True)
+class _Served:
+    """The immutable currently-served snapshot (swap = rebind, not mutate)."""
+    step: int
+    round: int
+    params: Any
+    metric: Optional[float]
+
+
+class ServeLoop:
+    """Checkpoint hot-swap serving with an eval-gated promotion rule.
+
+    ``poll()`` (swap path, may block on restore + held-out eval) and
+    ``handle()`` (request path, lock-free) are designed to run on the SAME
+    serving thread between requests; the training loop publishes from its
+    own thread through ``checkpoint.save``'s atomic rename.  ``handle``
+    reads ``self._served`` exactly once — the GIL makes that reference load
+    atomic, and a concurrent ``poll`` only ever REBINDS it to a new
+    immutable :class:`_Served`, so a request always computes against one
+    complete snapshot.
+
+    Promotion rule: the first complete snapshot is always promoted (it
+    seeds the baseline); afterwards a candidate is promoted only if its
+    held-out metric does not regress beyond ``tol`` against the CURRENTLY
+    SERVED snapshot's metric (``higher_is_better`` orients the
+    comparison).  Rejected steps are remembered so a bad snapshot is
+    evaluated once, not on every poll.
+    """
+
+    def __init__(self, ckpt_dir: str, template_params: Any,
+                 request_fn: Callable[[Any, Any], Any],
+                 eval_fn: Optional[Callable[[Any], float]] = None,
+                 higher_is_better: bool = False, tol: float = 0.0,
+                 recorder: Optional[OBS.Recorder] = None):
+        self.ckpt_dir = ckpt_dir
+        self.template = template_params
+        self.request_fn = request_fn
+        self.eval_fn = eval_fn
+        self.higher_is_better = higher_is_better
+        self.tol = float(tol)
+        self.rec = recorder if recorder is not None else OBS.Recorder()
+        self._served: Optional[_Served] = None
+        self._last_decided_step: Optional[int] = None
+        self.latest_round: int = 0         # newest PUBLISHED round seen
+
+    # -- swap path (never on the request path) --------------------------
+    def poll(self) -> bool:
+        """Check for a newer published snapshot; eval-gate and maybe swap.
+        Returns True iff a swap happened."""
+        step = CKPT.latest_step(self.ckpt_dir)
+        if step is None or step == self._last_decided_step:
+            return False
+        try:
+            meta = CKPT.metadata(self.ckpt_dir, step)
+            params, _ = CKPT.restore(self.ckpt_dir, self.template, step=step)
+        except FileNotFoundError:
+            # the publisher GC'd this step between listdir and read; a
+            # newer complete snapshot exists — pick it up next poll
+            self.rec.inc("serve_poll_misses")
+            return False
+        rnd = int(meta.get("round", step))
+        self.latest_round = max(self.latest_round, rnd)
+        self._last_decided_step = step
+        metric = float(self.eval_fn(params)) if self.eval_fn else None
+        promoted = self._served is None or metric is None or \
+            self._gate(metric, self._served.metric)
+        self.rec.inc("serve_promotions" if promoted else "serve_rejections")
+        self.rec.event("promotion", step=step, round=rnd, promoted=promoted,
+                       metric=metric,
+                       served_metric=None if self._served is None
+                       else self._served.metric)
+        if not promoted:
+            return False
+        self._served = _Served(step, rnd, params, metric)
+        self.rec.inc("serve_swaps")
+        self.rec.event("swap", step=step, round=rnd,
+                       staleness=self.latest_round - rnd)
+        return True
+
+    def _gate(self, candidate: float, served: Optional[float]) -> bool:
+        if served is None:
+            return True
+        if self.higher_is_better:
+            return candidate >= served - self.tol
+        return candidate <= served + self.tol
+
+    # -- request path (lock-free) ---------------------------------------
+    def handle(self, batch):
+        """Serve one request against the current snapshot.  One reference
+        read, zero locks; blocks only on the response itself (the
+        request's own sync point)."""
+        served = self._served                  # the one atomic read
+        if served is None:
+            raise RuntimeError(
+                f"nothing promoted yet (no checkpoints in {self.ckpt_dir}?)")
+        out = self.request_fn(served.params, batch)
+        out = jax.block_until_ready(out)
+        self.rec.inc("serve_requests")
+        self.rec.observe("serve_staleness", self.latest_round - served.round)
+        return out
+
+    @property
+    def served_step(self) -> Optional[int]:
+        s = self._served
+        return None if s is None else s.step
+
+    @property
+    def served_round(self) -> Optional[int]:
+        s = self._served
+        return None if s is None else s.round
+
+    @property
+    def served_metric(self) -> Optional[float]:
+        s = self._served
+        return None if s is None else s.metric
+
+
+def make_ce_eval(cfg: ModelConfig, held_out: Dict[str, jnp.ndarray],
+                 rt: Optional[dict] = None) -> Callable[[Any], float]:
+    """Held-out cross-entropy gate for token-LM serving (lower is better;
+    pair with ``higher_is_better=False``).  One jitted program, params
+    traced — the gate never recompiles across snapshots."""
+    api = build(cfg)
+    f = jax.jit(lambda p: api.loss_fn(p, held_out, cfg,
+                                      rt or default_runtime(cfg), None))
+    return lambda params: float(f(params))
+
+
+# ---------------------------------------------------------------------------
+# deterministic Poisson load generation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PoissonTraffic:
+    """Open-loop Poisson arrivals: the schedule (cumulative arrival times
+    in seconds) is fixed by the seed, independent of service times."""
+
+    rate_hz: float
+    seed: int = 0
+
+    def schedule(self) -> Iterator[float]:
+        if self.rate_hz <= 0:
+            raise ValueError(f"rate_hz must be > 0, got {self.rate_hz}")
+        rng = np.random.default_rng((self.seed, 0x7AFF1C))
+        t = 0.0
+        while True:
+            t += rng.exponential(1.0 / self.rate_hz)
+            yield t
+
+
+def run_traffic(serve: ServeLoop, traffic: PoissonTraffic,
+                make_batch: Callable[[int], Any],
+                should_stop: Callable[[], bool],
+                min_requests: int = 1,
+                max_requests: Optional[int] = None,
+                poll: bool = True) -> Dict[str, Any]:
+    """Drive the open-loop arrival schedule against ``serve`` until
+    ``should_stop()`` (and at least ``min_requests`` served).
+
+    Latency per request = completion - SCHEDULED arrival (wall clock), so
+    a server that falls behind accrues queueing delay instead of quietly
+    slowing the arrival process down.  ``poll=True`` checks for a new
+    snapshot between requests — on the serving thread, never under a lock.
+    """
+    sched = traffic.schedule()
+    lat_ms: List[float] = []
+    t0 = time.perf_counter()
+    n = 0
+    while not (should_stop() and n >= min_requests):
+        if max_requests is not None and n >= max_requests:
+            break
+        arrival = next(sched)
+        now = time.perf_counter() - t0
+        if arrival > now:
+            time.sleep(arrival - now)
+        serve.handle(make_batch(n))
+        done = time.perf_counter() - t0
+        ms = (done - arrival) * 1e3
+        lat_ms.append(ms)
+        serve.rec.observe("request_ms", ms)
+        if poll:
+            serve.poll()
+        n += 1
+    wall = time.perf_counter() - t0
+    return {"requests": n, "wall_s": wall,
+            "requests_per_sec": n / max(wall, 1e-9),
+            "offered_rate_hz": traffic.rate_hz, "latency_ms": lat_ms}
+
+
+def serve_while_training(train_fn: Callable[[], Any], serve: ServeLoop,
+                         traffic: PoissonTraffic,
+                         make_batch: Callable[[int], Any],
+                         min_requests: int = 1,
+                         max_requests: Optional[int] = None,
+                         final_poll: bool = True) -> Dict[str, Any]:
+    """Run ``train_fn`` on a background thread while the calling thread
+    serves traffic; returns the traffic stats.  Training exceptions
+    propagate after the traffic loop drains."""
+    err: List[BaseException] = []
+
+    def target():
+        try:
+            train_fn()
+        except BaseException as e:          # re-raised on the caller below
+            err.append(e)
+
+    th = threading.Thread(target=target, name="fl-train", daemon=True)
+    th.start()
+    try:
+        stats = run_traffic(serve, traffic, make_batch,
+                            should_stop=lambda: not th.is_alive(),
+                            min_requests=min_requests,
+                            max_requests=max_requests)
+    finally:
+        th.join()
+    if err:
+        raise err[0]
+    if final_poll:
+        serve.poll()                        # pick up the last-round publish
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# CLI: the standalone single-shot generation bench
+# ---------------------------------------------------------------------------
 
 
 def main(argv=None):
@@ -28,36 +365,31 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kernels", default="reference",
+                    choices=("reference", "pallas"))
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="serve the latest published snapshot from a "
+                         "training run's publish_dir instead of fresh init")
     args = ap.parse_args(argv)
 
     cfg = get_model_config(args.arch)
     if args.reduced:
         cfg = reduce_cfg(cfg)
-    api = build(cfg)
-    shape = ShapeConfig("serve", "prefill", args.prompt_len, args.batch)
-    rt = default_runtime(cfg, shape)
+    srv = GenerationServer(cfg, args.batch, args.prompt_len, gen=args.gen,
+                           kernels=args.kernels)
 
     from repro.models import init_params
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    if args.ckpt_dir:
+        params, step = CKPT.restore(args.ckpt_dir, params)
+        print(f"restored snapshot step {step} from {args.ckpt_dir}")
     rng = np.random.default_rng(args.seed)
     prompts = markov_tokens(args.batch, args.prompt_len, cfg.padded_vocab,
                             seed=args.seed)
-
-    batch = {"tokens": jnp.asarray(prompts)}
-    if cfg.family == "vlm":
-        n_img = cfg.num_image_tokens
-        batch["image_embeds"] = jnp.asarray(
-            rng.normal(size=(args.batch, n_img, cfg.d_model)), jnp.float32)
-    elif cfg.family == "encdec":
-        batch["enc_embeds"] = jnp.asarray(
-            rng.normal(size=(args.batch, args.prompt_len, cfg.d_model)),
-            jnp.float32)
-
-    prefill = jax.jit(lambda p, b: api.prefill_fn(p, b, cfg, rt, None))
-    decode = jax.jit(lambda p, t, c: api.decode_fn(p, t, c, cfg, rt, None))
+    batch = serve_batch(cfg, prompts, rng)
 
     t0 = time.time()
-    logits, cache = prefill(params, batch)
+    logits, cache = srv.prefill(params, batch)
     logits.block_until_ready()
     t_prefill = time.time() - t0
     print(f"prefill: {args.batch} x {args.prompt_len} tokens in "
@@ -65,16 +397,25 @@ def main(argv=None):
 
     token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     generated = [token]
+    decoded = args.gen - 1
     t0 = time.time()
-    for i in range(args.gen - 1):
-        logits, cache = decode(params, token, cache)
+    for _ in range(decoded):
+        logits, cache = srv.decode(params, token, cache)
         token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         generated.append(token)
-    token.block_until_ready()
-    dt = time.time() - t0
+    # tok/s semantics: intermediate steps stay async-dispatched (syncing
+    # each logits tensor would serialize dispatch against execution and
+    # understate throughput); the clock stops against the BLOCKED final
+    # token only.  --gen 1 decodes nothing: dt would be ~0 and the rate a
+    # 0/0 artifact, so the figure is skipped rather than fabricated.
+    if decoded:
+        token.block_until_ready()
+        dt = time.time() - t0
+        print(f"decode: {args.batch} x {decoded} tokens in {dt:.2f}s "
+              f"({args.batch * decoded / max(dt, 1e-9):.1f} tok/s)")
+    else:
+        print("decode: skipped (--gen 1 is prefill-only; tok/s undefined)")
     toks = jnp.concatenate(generated, axis=1)
-    print(f"decode: {args.batch} x {args.gen} tokens in {dt:.2f}s "
-          f"({args.batch * (args.gen - 1) / max(dt, 1e-9):.1f} tok/s)")
     print("sample:", np.asarray(toks[0])[:16].tolist())
     assert bool(jnp.all(toks >= 0)) and bool(jnp.all(toks < cfg.padded_vocab))
     return toks

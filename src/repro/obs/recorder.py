@@ -236,8 +236,9 @@ class Recorder:
             n = len(s)
             out[name] = {"count": n, "min": s[0], "max": s[-1],
                          "mean": sum(s) / n,
-                         "p50": s[n // 2], "p90": s[(9 * n) // 10
-                                                    if n > 1 else 0]}
+                         "p50": s[n // 2],
+                         "p90": s[min((9 * n) // 10, n - 1)],
+                         "p99": s[min((99 * n) // 100, n - 1)]}
         return out
 
     def snapshot(self) -> dict:

@@ -141,6 +141,41 @@ def render(events: List[dict]) -> str:
                      + _fmt_table(["round", "sim_time",
                                    "straggler_volumes"], rows))
 
+    promos = _by_kind(events, "promotion")
+    swaps = _by_kind(events, "swap")
+    if promos or swaps:
+        summary = _first(events, "summary")
+        counters = summary.get("counters", {})
+        hists = summary.get("hists", {})
+        head = []
+        for k in ("serve_requests", "serve_swaps", "serve_promotions",
+                  "serve_rejections", "published_snapshots"):
+            if k in counters:
+                head.append(f"{k}={counters[k]}")
+        parts.append("serving plane: " + "  ".join(head))
+        rows = []
+        for p in promos:
+            rows.append([
+                str(p.get("step", "?")), str(p.get("round", "?")),
+                "promote" if p.get("promoted") else "reject",
+                f"{p.get('metric', float('nan')):.4f}",
+                "-" if p.get("served_metric") is None
+                else f"{p['served_metric']:.4f}",
+            ])
+        if rows:
+            parts.append("promotion decisions\n" + _fmt_table(
+                ["step", "round", "decision", "metric", "served_metric"],
+                rows))
+        rows = [[str(s.get("step", "?")), str(s.get("round", "?")),
+                 str(s.get("staleness", "?"))] for s in swaps]
+        if rows:
+            parts.append("hot swaps\n" + _fmt_table(
+                ["step", "round", "staleness_rounds"], rows))
+        for name in ("request_ms", "serve_staleness"):
+            if name in hists:
+                parts.append(f"{name}: " + json.dumps(hists[name],
+                                                      sort_keys=True))
+
     spans = _by_kind(events, "span")
     if spans:
         agg = {}

@@ -2,9 +2,9 @@
 
 Layer 1 (lint): every rule fires on a minimal violating fixture and is
 silenced by ``# repro: noqa[Rn]`` on the finding line; the repo's own
-``src/`` is clean (zero unsuppressed findings) while the known intentional
-orphans (optim/compression.py, launch/serve.py) stay VISIBLE as suppressed
-findings in the JSON report.
+``src/`` is clean (zero unsuppressed findings) and the once-orphaned
+modules (optim/compression.py, core/theory.py, launch/serve.py) are all
+WIRED — reached from production entry points, no R6 finding at all.
 
 Layer 2 (contracts): the transfer guard blocks implicit device->host syncs
 in engine hot loops (and a deliberately leaky engine subclass trips it),
@@ -252,12 +252,12 @@ def test_r6_orphan_noqa_in_docstring(tmp_path):
 
 
 def test_repo_src_is_lint_clean():
-    """The gate CI enforces: zero unsuppressed findings over src/, while
-    the remaining intentional orphan (launch/serve.py) stays visible as a
-    SUPPRESSED finding.  optim/compression.py (the engines' compression
-    knob) and core/theory.py (the scheme-gauntlet bench's Prop. 2 report)
-    are WIRED now: R6 must see them reached from an entry point — no
-    finding at all, suppressed or otherwise."""
+    """The gate CI enforces: zero unsuppressed findings over src/, and
+    every once-orphaned module is WIRED now — optim/compression.py (the
+    engines' compression knob), core/theory.py (the scheme-gauntlet
+    bench's Prop. 2 report), and launch/serve.py (the serve-while-you-
+    train traffic bench).  R6 must see each reached from a production
+    entry point: no finding at all, suppressed or otherwise."""
     findings = lint_paths([SRC])
     assert unsuppressed(findings) == [], \
         [str(f) for f in unsuppressed(findings)]
@@ -265,13 +265,10 @@ def test_repo_src_is_lint_clean():
     assert report["unsuppressed"] == 0
     r6_paths = [f["path"] for f in report["findings"] if f["rule"] == "R6"]
     for wired in (os.path.join("optim", "compression.py"),
-                  os.path.join("core", "theory.py")):
+                  os.path.join("core", "theory.py"),
+                  os.path.join("launch", "serve.py")):
         assert not any(p.endswith(wired) for p in r6_paths), (wired,
                                                               r6_paths)
-    suppressed_paths = [f["path"] for f in report["findings"]
-                        if f["suppressed"] and f["rule"] == "R6"]
-    assert any(p.endswith(os.path.join("launch", "serve.py"))
-               for p in suppressed_paths), suppressed_paths
 
 
 def test_cli_exit_codes(tmp_path):

@@ -1,0 +1,333 @@
+"""Serve-while-you-train: checkpoint hardening + lock-free hot-swap serving.
+
+Pins the checkpoint-layer bugfix sweep (keep<=0 GC, NamedTuple restore
+fidelity, clean empty-dir errors, crash-leftover tmp sweep), the
+kill-mid-write recovery story (a truncated ``.tmp`` is unobservable: the
+older complete step restores and the ServeLoop never serves a partial
+snapshot), the eval-gated promotion rule (a regressing snapshot is NOT
+promoted and the decision lands in the obs run log), the lock-free swap
+(one compiled prefill/decode program across swaps), the engines'
+round-end publish hook, and the ``--gen 1`` CLI edge case.
+"""
+import collections
+import os
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro import checkpoint as CKPT
+from repro.configs import ARCHS, CNNS, HeliosConfig, reduced
+from repro.data.federated import partition_noniid
+from repro.data.synthetic import class_gaussian_images, markov_tokens
+from repro.federated import FLRun, make_fleet, setup_clients
+from repro.launch import serve as SV
+from repro.models import init_params
+from repro.obs import recorder as OBS
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(3, 4)).astype(np.float32),
+            "b": rng.normal(size=(4,)).astype(np.float32)}
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-layer bugfix sweep
+# ---------------------------------------------------------------------------
+
+
+def test_save_keep_zero_raises(tmp_path):
+    """keep=0 used to make steps[:-0] the empty slice — GC silently kept
+    everything; now it fails loudly."""
+    with pytest.raises(ValueError, match="keep must be >= 1"):
+        CKPT.save(str(tmp_path), 1, _tree(), keep=0)
+
+
+def test_gc_keeps_exactly_n(tmp_path):
+    for s in range(5):
+        CKPT.save(str(tmp_path), s, _tree(s), keep=2)
+    kept = sorted(f for f in os.listdir(tmp_path) if f.endswith(".zst"))
+    assert kept == ["ckpt_3.msgpack.zst", "ckpt_4.msgpack.zst"]
+
+
+def test_gc_sweeps_stale_tmp(tmp_path):
+    """A crash mid-write abandons a ``.tmp``; the next save's GC removes
+    it instead of letting leftovers accumulate forever."""
+    stale = tmp_path / "ckpt_7.msgpack.zst.tmp"
+    stale.write_bytes(b"partial garbage from a dead writer")
+    CKPT.save(str(tmp_path), 8, _tree(), keep=3)
+    assert not stale.exists()
+    assert CKPT.latest_step(str(tmp_path)) == 8
+
+
+def test_restore_namedtuple_roundtrip(tmp_path):
+    """NamedTuple containers (optimizer moments) must come back as the
+    same pytree TYPE, not collapse to plain tuples."""
+    Moments = collections.namedtuple("Moments", ["mu", "nu"])
+    state = {"opt": Moments(mu=_tree(1), nu=_tree(2)),
+             "steps": (np.int32(3), np.int32(4))}
+    CKPT.save(str(tmp_path), 1, state)
+    out, step = CKPT.restore(str(tmp_path), state)
+    assert step == 1
+    assert type(out["opt"]) is Moments
+    assert type(out["steps"]) is tuple
+    np.testing.assert_allclose(out["opt"].mu["w"], state["opt"].mu["w"])
+    # pytree structure identical => jax.tree.map over both works
+    jax.tree.map(np.subtract, out, state)
+
+
+def test_metadata_and_restore_empty_dir_clean_error(tmp_path):
+    """An empty directory raises the clean 'no checkpoints in' error,
+    not a baffling ckpt_None.msgpack.zst FileNotFoundError."""
+    for fn in (lambda: CKPT.metadata(str(tmp_path)),
+               lambda: CKPT.restore(str(tmp_path), _tree())):
+        with pytest.raises(FileNotFoundError, match="no checkpoints in"):
+            fn()
+
+
+def test_restore_ignores_truncated_tmp(tmp_path):
+    """Kill-mid-write: a truncated ``.tmp`` next to an older complete
+    checkpoint is unobservable — restore picks the older step."""
+    CKPT.save(str(tmp_path), 1, _tree(1))
+    blob = (tmp_path / "ckpt_1.msgpack.zst").read_bytes()
+    (tmp_path / "ckpt_2.msgpack.zst.tmp").write_bytes(blob[:len(blob) // 3])
+    assert CKPT.latest_step(str(tmp_path)) == 1
+    out, step = CKPT.restore(str(tmp_path), _tree())
+    assert step == 1
+    np.testing.assert_allclose(out["w"], _tree(1)["w"])
+
+
+# ---------------------------------------------------------------------------
+# ServeLoop: promotion gate + lock-free hot swap
+# ---------------------------------------------------------------------------
+
+
+def _echo_request(params, batch):
+    return jax.numpy.asarray(params["w"]).sum() + batch
+
+
+def test_promotion_gate_rejects_regression(tmp_path):
+    """The acceptance pin: a regressing snapshot is NOT promoted, the
+    decision is recorded, and swap/staleness events land in the run log."""
+    d = str(tmp_path)
+    metrics = iter([1.0, 2.0, 0.9])        # good, regressed, recovered
+    rec = OBS.Recorder(armed=True)
+    loop = SV.ServeLoop(d, _tree(), request_fn=_echo_request,
+                        eval_fn=lambda p: next(metrics),
+                        higher_is_better=False, tol=0.1, recorder=rec)
+    CKPT.save(d, 1, _tree(1), metadata={"round": 1})
+    assert loop.poll() and loop.served_step == 1
+
+    CKPT.save(d, 2, _tree(2), metadata={"round": 2})
+    assert not loop.poll()                 # 2.0 > 1.0 + tol: rejected
+    assert loop.served_step == 1 and loop.served_metric == 1.0
+    assert not loop.poll()                 # decided once, not re-evaluated
+    assert rec.count("serve_rejections") == 1
+
+    CKPT.save(d, 3, _tree(3), metadata={"round": 3})
+    assert loop.poll() and loop.served_step == 3
+    assert rec.count("serve_swaps") == 2
+    # the request path observes the staleness of what it serves
+    loop.handle(0.0)
+    kinds = [e["kind"] for e in rec.events]
+    assert kinds.count("promotion") == 3 and kinds.count("swap") == 2
+    promo = [e for e in rec.events if e["kind"] == "promotion"]
+    assert [p["promoted"] for p in promo] == [True, False, True]
+    swaps = [e for e in rec.events if e["kind"] == "swap"]
+    assert all("staleness" in s for s in swaps)
+    assert rec.hists["serve_staleness"] == [0]
+
+
+def test_promotion_gate_higher_is_better(tmp_path):
+    d = str(tmp_path)
+    metrics = iter([0.8, 0.5])
+    loop = SV.ServeLoop(d, _tree(), request_fn=_echo_request,
+                        eval_fn=lambda p: next(metrics),
+                        higher_is_better=True, tol=0.1)
+    CKPT.save(d, 1, _tree(1))
+    assert loop.poll()
+    CKPT.save(d, 2, _tree(2))
+    assert not loop.poll()                 # 0.5 < 0.8 - 0.1: rejected
+
+
+def test_serve_before_any_snapshot_raises(tmp_path):
+    loop = SV.ServeLoop(str(tmp_path), _tree(), request_fn=_echo_request)
+    assert not loop.poll()
+    with pytest.raises(RuntimeError, match="nothing promoted"):
+        loop.handle(0.0)
+
+
+def test_hot_swap_never_serves_partial_snapshot(tmp_path):
+    """A truncated in-flight ``.tmp`` must be invisible to the poll path:
+    the loop keeps serving the older complete step."""
+    d = str(tmp_path)
+    loop = SV.ServeLoop(d, _tree(), request_fn=_echo_request)
+    CKPT.save(d, 1, _tree(1), metadata={"round": 1})
+    assert loop.poll() and loop.served_step == 1
+    blob = (tmp_path / "ckpt_1.msgpack.zst").read_bytes()
+    (tmp_path / "ckpt_2.msgpack.zst.tmp").write_bytes(blob[: len(blob) // 3])
+    assert not loop.poll()                 # tmp never matches the key re
+    out = loop.handle(0.0)
+    assert loop.served_step == 1
+    np.testing.assert_allclose(np.asarray(out), _tree(1)["w"].sum(),
+                               rtol=1e-6)
+
+
+@pytest.fixture(scope="module")
+def lm_serving():
+    cfg = reduced(ARCHS["xlstm-125m"])
+    srv = SV.GenerationServer(cfg, batch=2, prompt_len=8, gen=3)
+    prompts = markov_tokens(2, 8, cfg.padded_vocab, seed=0)
+    req = SV.serve_batch(cfg, prompts, np.random.default_rng(0))
+    return cfg, srv, req
+
+
+def test_hot_swap_lm_no_recompile(lm_serving, tmp_path):
+    """Swapping published snapshots rebinds the params reference between
+    jitted calls: ONE prefill + ONE decode program across every swap."""
+    cfg, srv, req = lm_serving
+    d = str(tmp_path)
+    loop = SV.ServeLoop(d, init_params(jax.random.PRNGKey(0), cfg),
+                        request_fn=srv)
+    for step in (1, 2, 3):
+        CKPT.save(d, step, init_params(jax.random.PRNGKey(step), cfg),
+                  metadata={"round": step})
+        assert loop.poll() and loop.served_step == step
+        toks = loop.handle(req)
+        assert toks.shape == (2, 3)
+    assert srv.programs() == {"prefill": 1, "decode": 1}
+
+
+def test_traffic_loop_serves_while_training(lm_serving, tmp_path):
+    """serve_while_training overlaps a publisher thread with the traffic
+    loop; the final poll picks up the last publish and the stats carry
+    every per-request latency."""
+    cfg, srv, req = lm_serving
+    d = str(tmp_path)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rec = OBS.Recorder(armed=True)
+    loop = SV.ServeLoop(d, params, request_fn=srv, recorder=rec)
+    CKPT.save(d, 0, params, metadata={"round": 0})
+    assert loop.poll()
+    published = threading.Event()
+
+    def train_fn():                         # stand-in publisher
+        CKPT.save(d, 5, init_params(jax.random.PRNGKey(5), cfg),
+                  metadata={"round": 5})
+        published.wait(5.0)
+
+    def make_batch(i):
+        published.set()
+        return req
+
+    stats = SV.serve_while_training(
+        train_fn, loop, SV.PoissonTraffic(rate_hz=500.0, seed=0),
+        make_batch, min_requests=3)
+    assert stats["requests"] >= 3
+    assert len(stats["latency_ms"]) == stats["requests"]
+    assert stats["requests_per_sec"] > 0
+    assert loop.served_step == 5            # final poll saw the publish
+    assert rec.count("serve_swaps") >= 2
+    assert srv.programs() == {"prefill": 1, "decode": 1}
+
+
+def test_traffic_training_exception_propagates(lm_serving, tmp_path):
+    cfg, srv, req = lm_serving
+    d = str(tmp_path)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    loop = SV.ServeLoop(d, params, request_fn=srv)
+    CKPT.save(d, 0, params, metadata={"round": 0})
+    assert loop.poll()
+
+    def boom():
+        raise RuntimeError("train thread died")
+
+    with pytest.raises(RuntimeError, match="train thread died"):
+        SV.serve_while_training(boom, loop,
+                                SV.PoissonTraffic(rate_hz=500.0, seed=0),
+                                lambda i: req, min_requests=1)
+
+
+def test_poisson_schedule_deterministic():
+    import itertools
+    a = list(itertools.islice(SV.PoissonTraffic(50.0, seed=3).schedule(), 20))
+    b = list(itertools.islice(SV.PoissonTraffic(50.0, seed=3).schedule(), 20))
+    c = list(itertools.islice(SV.PoissonTraffic(50.0, seed=4).schedule(), 20))
+    assert a == b and a != c
+    assert all(x < y for x, y in zip(a, a[1:]))
+
+
+# ---------------------------------------------------------------------------
+# the engines' round-end publish hook
+# ---------------------------------------------------------------------------
+
+
+def test_publish_hook_round_end(tmp_path):
+    """publish_dir + publish_every: atomic snapshots at round end, GC'd to
+    publish_keep, metadata carrying round/sim_time/scheme, and the
+    published params exactly the live global params."""
+    cfg = reduced(CNNS["lenet"])
+    imgs, labels = class_gaussian_images(400, cfg.image_size,
+                                         cfg.in_channels, cfg.num_classes,
+                                         seed=0)
+    parts = partition_noniid(labels, 4, shards_per_client=4)
+    clients = setup_clients(make_fleet(2, 2), parts, HeliosConfig())
+    run = FLRun(cfg, HeliosConfig(), "helios", clients,
+                {"images": imgs, "labels": labels},
+                {"images": imgs[:64], "labels": labels[:64]},
+                local_steps=1, lr=0.05, seed=0, eval_batch=64,
+                publish_dir=str(tmp_path), publish_every=2,
+                publish_keep=1)
+    run.run_sync(4, eval_every=0)
+    steps = sorted(int(f.split("_")[1].split(".")[0])
+                   for f in os.listdir(tmp_path) if f.endswith(".zst"))
+    assert steps == [4]                     # published at rounds 2,4; keep=1
+    assert run.rec.count("published_snapshots") == 2
+    meta = CKPT.metadata(str(tmp_path))
+    assert meta["round"] == 4 and meta["scheme"] == "helios"
+    assert meta["sim_time"] > 0
+    out, step = CKPT.restore(str(tmp_path), run.global_params)
+    assert step == 4
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(run.global_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_publish_every_validation():
+    with pytest.raises(ValueError, match="publish_every"):
+        cfg = reduced(CNNS["lenet"])
+        imgs, labels = class_gaussian_images(64, cfg.image_size,
+                                             cfg.in_channels,
+                                             cfg.num_classes, seed=0)
+        parts = partition_noniid(labels, 2, shards_per_client=2)
+        clients = setup_clients(make_fleet(1, 1), parts, HeliosConfig())
+        FLRun(cfg, HeliosConfig(), "helios", clients,
+              {"images": imgs, "labels": labels},
+              {"images": imgs, "labels": labels}, publish_every=0)
+
+
+# ---------------------------------------------------------------------------
+# CLI edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_cli_gen_one_prefill_only(capsys):
+    """--gen 1 decodes nothing: the tok/s figure is skipped, not a 0/0
+    artifact, and the prompt's first token still comes back."""
+    toks = SV.main(["--arch", "xlstm-125m", "--reduced", "--batch", "1",
+                    "--prompt-len", "8", "--gen", "1"])
+    assert toks.shape == (1, 1)
+    out = capsys.readouterr().out
+    assert "prefill-only" in out and "tok/s" not in out.split("skipped")[0]
+
+
+def test_cli_serves_published_checkpoint(tmp_path, capsys):
+    cfg = reduced(ARCHS["xlstm-125m"])
+    CKPT.save(str(tmp_path), 9, init_params(jax.random.PRNGKey(1), cfg),
+              metadata={"round": 9})
+    toks = SV.main(["--arch", "xlstm-125m", "--reduced", "--batch", "1",
+                    "--prompt-len", "8", "--gen", "2",
+                    "--ckpt-dir", str(tmp_path)])
+    assert toks.shape == (1, 2)
+    assert "restored snapshot step 9" in capsys.readouterr().out
